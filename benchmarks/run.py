@@ -1,0 +1,89 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the full JSON to
+``results/bench_*.json``.  ``us_per_call`` is the simulated chip
+execution time per sample (cycles @ 1 GHz) for the CIMFlow benchmarks,
+and the roofline-bound step time for the dry-run cells.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+from benchmarks import fig5_compilation, fig6_arch_sweep, fig7_codesign
+from benchmarks import roofline as roofline_mod
+
+
+def _save(name: str, rows) -> None:
+    os.makedirs("results", exist_ok=True)
+    with open(f"results/bench_{name}.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="analytic cost model instead of the simulator")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+    simulate = not args.quick
+
+    print("name,us_per_call,derived")
+
+    rows = fig5_compilation.run(simulate=simulate)
+    _save("fig5", rows)
+    for r in rows:
+        print(f"fig5.{r['model']}.{r['strategy']},"
+              f"{r['cycles'] / 4 / 1e3:.1f},"
+              f"speed_norm={r['speed_norm']:.2f};"
+              f"energy_norm={r['energy_norm']:.2f}")
+    print(fig5_compilation.report(rows), file=sys.stderr)
+
+    rows = fig6_arch_sweep.run(simulate=simulate)
+    _save("fig6", rows)
+    for r in rows:
+        print(f"fig6.{r['model']}.mg{r['mg']}.flit{r['flit']},"
+              f"{r['cycles'] / 4 / 1e3:.1f},"
+              f"thpt={r['throughput_sps']:.1f};"
+              f"compute_frac={r['energy_compute_frac']:.2f}")
+    print(fig6_arch_sweep.report(rows), file=sys.stderr)
+
+    rows = fig7_codesign.run(simulate=False)
+    _save("fig7", rows)
+    for r in rows:
+        print(f"fig7.{r['model']}.{r['strategy']}.mg{r['mg']}."
+              f"flit{r['flit']},{r['cycles'] / 4 / 1e3:.1f},"
+              f"thpt={r['throughput_sps']:.1f}")
+    print(fig7_codesign.report(rows), file=sys.stderr)
+
+    if not args.skip_roofline:
+        try:
+            rows = roofline_mod.rows()
+            _save("roofline", rows)
+            for r in rows:
+                if r.get("status") != "ok":
+                    continue
+                bound = max(r["compute_s"], r["memory_s"],
+                            r["collective_s"])
+                print(f"roofline.{r['arch']}.{r['shape']},"
+                      f"{bound * 1e6:.1f},dominant={r['dominant']}")
+            print(roofline_mod.report("1pod"), file=sys.stderr)
+        except FileNotFoundError:
+            print("roofline: results/dryrun.json missing — run "
+                  "`python -m repro.launch.dryrun --all` first",
+                  file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+"""Design-space exploration example (paper §IV-C + future-work DSE).
+
+Sweeps MG size x NoC flit x strategy for one workload with the analytic
+model, then validates the Pareto-best point with the cycle-accurate
+simulator — the paper's "systematic prototyping" workflow.
+
+    PYTHONPATH=src python examples/dse_sweep.py [model]
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import workloads
+from repro.core.arch import default_chip
+from repro.core.dse import SWEEP_FLIT, SWEEP_MG, evaluate
+from repro.core.mapping import CostParams
+from repro.core.partition import STRATEGIES
+
+
+def main() -> int:
+    model = sys.argv[1] if len(sys.argv) > 1 else "mobilenetv2"
+    cg = workloads.build(model, res=112).condense()
+    params = CostParams(batch=4)
+    print(f"DSE over {model}: MG {SWEEP_MG} x flit {SWEEP_FLIT} x "
+          f"{STRATEGIES}")
+    best = None
+    for strat in STRATEGIES:
+        for mg in SWEEP_MG:
+            for flit in SWEEP_FLIT:
+                chip = default_chip(macros_per_group=mg, flit_bytes=flit)
+                pt = evaluate(cg, chip, strat, params, simulate=False)
+                edp = pt.cycles * pt.energy["total"]
+                marker = ""
+                if best is None or edp < best[0]:
+                    best = (edp, strat, mg, flit)
+                    marker = "  <- best EDP so far"
+                print(f"  {strat:8s} MG={mg:2d} flit={flit:2d}: "
+                      f"{pt.cycles:10.0f} cyc, "
+                      f"{pt.energy['total'] / 1e6:7.2f} mJ{marker}")
+    _, strat, mg, flit = best
+    print(f"\nvalidating best point ({strat}, MG={mg}, flit={flit}B) "
+          f"with the cycle-accurate simulator...")
+    chip = default_chip(macros_per_group=mg, flit_bytes=flit)
+    pt = evaluate(cg, chip, strat, params, simulate=True)
+    print(f"  simulated: {pt.cycles:.0f} cycles, "
+          f"{pt.energy['total'] / 1e6:.2f} mJ, "
+          f"{pt.throughput_sps:.1f} samples/s @1GHz")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Batched-request serving example (deliverable b).
+
+Serves three architecture families — dense+SWA ring cache, pure-SSM
+constant state, MoE expert-parallel — through the same decode path.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main() -> int:
+    for arch, gen in [("h2o-danube-3-4b", 16), ("mamba2-780m", 16),
+                      ("olmoe-1b-7b", 16)]:
+        print(f"\n=== {arch} ===")
+        rc = serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
+                             "--prompt-len", "24", "--gen", str(gen)])
+        if rc:
+            return rc
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, async, sharded, resumable."""
+
+from .manager import CheckpointManager, load_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

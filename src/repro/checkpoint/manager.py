@@ -1,0 +1,158 @@
+"""Checkpoint manager: atomic manifests, async saves, keep-last-k GC.
+
+Layout per step::
+
+    <dir>/step_<N>.tmp/        (written first)
+        shard_<i>.npz          one npz per host shard (flat path -> array)
+        manifest.json          pytree structure + dtypes + metadata
+    <dir>/step_<N>/            (atomic rename once complete)
+    <dir>/LATEST               text file naming the newest complete step
+
+Restart safety: a crash mid-save leaves only ``*.tmp`` directories, which
+restore ignores and the next save garbage-collects.  Restores validate
+the manifest against the expected tree structure before loading bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(tree, directory: str, *, metadata: Optional[Dict] = None,
+                n_shards: int = 1) -> None:
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    items = _flatten_with_paths(tree)
+    manifest = {
+        "keys": [k for k, _ in items],
+        "dtypes": [str(np.asarray(v).dtype) for _, v in items],
+        "shapes": [list(np.asarray(v).shape) for _, v in items],
+        "n_shards": n_shards,
+        "metadata": metadata or {},
+        "time": time.time(),
+    }
+    for s in range(n_shards):
+        blob = {k.replace("/", "__"): np.asarray(v)
+                for i, (k, v) in enumerate(items)
+                if i % n_shards == s}
+        np.savez(os.path.join(tmp, f"shard_{s}.npz"), **blob)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)          # atomic commit
+
+
+def load_pytree(template, directory: str) -> Tuple[Any, Dict]:
+    """Load into the structure of ``template`` (validated)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    items = _flatten_with_paths(template)
+    want = [k for k, _ in items]
+    if manifest["keys"] != want:
+        missing = set(want) - set(manifest["keys"])
+        extra = set(manifest["keys"]) - set(want)
+        raise ValueError(f"checkpoint structure mismatch: missing="
+                         f"{sorted(missing)[:5]} extra={sorted(extra)[:5]}")
+    blobs: Dict[str, np.ndarray] = {}
+    for s in range(manifest["n_shards"]):
+        with np.load(os.path.join(directory, f"shard_{s}.npz")) as z:
+            for k in z.files:
+                blobs[k.replace("__", "/")] = z[k]
+    leaves = [blobs[k] for k, _ in items]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), \
+        manifest["metadata"]
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with async save and keep-last-k."""
+
+    def __init__(self, root: str, *, keep: int = 3,
+                 n_shards: int = 1) -> None:
+        self.root = root
+        self.keep = keep
+        self.n_shards = n_shards
+        os.makedirs(root, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # -- paths -----------------------------------------------------------------
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:010d}")
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.isdir(os.path.join(self.root, name)):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save / restore ----------------------------------------------------------
+
+    def save(self, step: int, tree, *, metadata: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()                        # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot off-device
+
+        def work():
+            save_pytree(host_tree, self._dir(step), metadata=metadata,
+                        n_shards=self.n_shards)
+            with open(os.path.join(self.root, "LATEST"), "w") as f:
+                f.write(str(step))
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+
+    def restore(self, template, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        tree, meta = load_pytree(template, self._dir(step))
+        return step, tree, meta
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+        for name in os.listdir(self.root):        # crashed partial saves
+            if name.endswith(".tmp"):
+                full = os.path.join(self.root, name)
+                if time.time() - os.path.getmtime(full) > 60:
+                    shutil.rmtree(full, ignore_errors=True)

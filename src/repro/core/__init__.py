@@ -1,0 +1,26 @@
+"""CIMFlow core: the paper's contribution as a composable library.
+
+Pipeline:  workloads -> graph (condense) -> partition (Alg. 1 / baselines)
+           -> oplevel (virtual/physical mapping) -> codegen (ISA streams)
+           -> simulator (cycle-accurate perf / functional ISS) -> energy.
+"""
+
+from . import (arch, codegen, energy, graph, isa, mapping, oplevel,
+               partition, ref, simulator, workloads)
+from .arch import ChipConfig, default_chip
+from .codegen import CompiledModel, QuantParams, compile_model
+from .graph import CondensedGraph, Graph
+from .isa import Isa, Program, default_isa
+from .mapping import CostParams
+from .partition import (PartitionResult, STRATEGIES,
+                        partition as partition_model)
+from .simulator import SimReport, Simulator
+
+__all__ = [
+    "arch", "codegen", "energy", "graph", "isa", "mapping", "oplevel",
+    "partition", "ref", "simulator", "workloads",
+    "ChipConfig", "default_chip", "CompiledModel", "QuantParams",
+    "compile_model", "CondensedGraph", "Graph", "Isa", "Program",
+    "default_isa", "CostParams", "PartitionResult", "STRATEGIES",
+    "partition_model", "SimReport", "Simulator",
+]

@@ -1,0 +1,87 @@
+"""Design-space exploration driver (paper §IV-C).
+
+Sweeps architectural parameters (MG size, NoC flit width, local-memory
+size, core count) x compilation strategies, evaluating each point with
+the analytic cost model (fast) or the cycle-accurate simulator (ground
+truth).  Powers the Fig. 6 / Fig. 7 benchmarks and the ``dse_sweep``
+example.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+from .arch import ChipConfig, default_chip
+from .codegen import compile_model
+from .energy import DEFAULT_TABLE, energy_breakdown
+from .graph import CondensedGraph
+from .mapping import CostParams
+from .partition import partition
+from .simulator import Simulator
+
+__all__ = ["DsePoint", "evaluate", "sweep_mg_flit", "SWEEP_MG",
+           "SWEEP_FLIT"]
+
+SWEEP_MG = (4, 8, 16)          # macros per MG (Fig. 6 x-axis)
+SWEEP_FLIT = (8, 16)           # NoC flit bytes (light/dark shading)
+
+
+@dataclass
+class DsePoint:
+    model: str
+    strategy: str
+    macros_per_group: int
+    flit_bytes: int
+    cycles: float
+    throughput_sps: float       # samples/s at 1 GHz
+    energy: Dict[str, float]    # nJ breakdown
+    simulated: bool
+
+    def row(self) -> Dict:
+        return {
+            "model": self.model, "strategy": self.strategy,
+            "mg": self.macros_per_group, "flit": self.flit_bytes,
+            "cycles": self.cycles, "throughput_sps": self.throughput_sps,
+            "energy_total_mJ": self.energy["total"] / 1e6,
+            **{f"energy_{k}_frac":
+               (self.energy[k] / self.energy["total"]
+                if self.energy["total"] else 0.0)
+               for k in ("compute", "weight_load", "noc", "gmem",
+                         "lmem", "static")},
+            "simulated": self.simulated,
+        }
+
+
+def evaluate(cg: CondensedGraph, chip: ChipConfig, strategy: str,
+             params: Optional[CostParams] = None,
+             simulate: bool = False) -> DsePoint:
+    params = params or CostParams(batch=4)
+    res = partition(cg, chip, strategy, params)
+    if simulate:
+        model = compile_model(res, batch=params.batch)
+        rep = Simulator(chip, model.isa, mode="perf").run_model(model)
+        cycles = rep.cycles
+        energy = rep.energy()
+    else:
+        cycles = res.latency_cycles()
+        energy = energy_breakdown(res.energy_events())
+    sps = params.batch / (cycles / (chip.clock_ghz * 1e9))
+    return DsePoint(model=cg.name, strategy=strategy,
+                    macros_per_group=chip.core.cim.macros_per_group,
+                    flit_bytes=chip.noc.flit_bytes, cycles=cycles,
+                    throughput_sps=sps, energy=energy,
+                    simulated=simulate)
+
+
+def sweep_mg_flit(cg: CondensedGraph, strategy: str = "generic",
+                  mgs: Iterable[int] = SWEEP_MG,
+                  flits: Iterable[int] = SWEEP_FLIT,
+                  simulate: bool = False,
+                  params: Optional[CostParams] = None) -> List[DsePoint]:
+    out = []
+    for mg in mgs:
+        for flit in flits:
+            chip = default_chip(macros_per_group=mg, flit_bytes=flit)
+            out.append(evaluate(cg, chip, strategy, params, simulate))
+    return out

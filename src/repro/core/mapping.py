@@ -1,0 +1,518 @@
+"""Core mapping + analytic cost model (paper §III-C, ``OptimalMapping``).
+
+Given a candidate partition *stage* (a set of condensed-CG groups) and the
+hardware resources, this module decides
+
+* how many MG-tiles each group needs (weight → macro allocation, organized
+  along output channels; block-diagonal packing for grouped/depth-wise conv);
+* how many cores each group occupies and its **duplication factor** — the
+  paper's key lever: replicating an operator's weights across clusters of
+  cores buys parallel throughput at the price of extra weight-load and
+  input-multicast traffic;
+* the resulting stage cost: weight-(re)load cycles + pipeline fill +
+  steady-state interval per sample, plus an energy-event ledger.
+
+Execution model (documented assumptions; the cycle-accurate simulator is the
+ground truth, this model guides the DP search):
+
+* Stages run **sequentially**: load stage weights, stream the whole batch
+  through the stage's inter-operator pipeline, spill boundary activations to
+  global memory, move on.  This is the capacity-wall execution the paper
+  targets.
+* Within a stage each group occupies its own cluster of cores (several small
+  groups may share a core — their intervals then serialize).
+* A replica processes one im2col input vector per ``act_bits`` beats
+  (bit-serial), all its MG-tiles firing in parallel; ``dup`` replicas split
+  ``gemm_m``.
+* Input multicast: each extra replica re-receives ``alpha x in_bytes``
+  (``alpha = 1`` — conservative full broadcast, matching the MG input
+  broadcast organization).
+* Oversized groups (weights exceed whole-chip MG capacity) execute in
+  ``rounds`` with weight streaming.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .arch import ChipConfig
+from .graph import CondensedGraph, Group
+
+__all__ = [
+    "CostParams", "GroupAlloc", "StagePlan", "mg_tiles", "min_cores",
+    "optimal_mapping", "generic_mapping", "opportunistic_mapping",
+]
+
+
+@dataclass(frozen=True)
+class CostParams:
+    """Knobs of the analytic cost model."""
+
+    batch: int = 32                # samples streamed per stage
+    # Duplication splits a group's work along its spatial/batch dimension:
+    # each replica receives only its input slice, plus a halo overlap for
+    # convolutions.  ``dup_halo`` is the per-extra-replica traffic overhead.
+    dup_halo: float = 0.15
+    max_dup: int = 64              # duplication search bound
+    # Inter-operator pipelines stream at *row-chunk* granularity: a consumer
+    # starts once its producer has emitted the few rows its kernel needs, so
+    # the fill contribution of a spatial (gemm_m > 1) group is only a
+    # fraction of its per-sample latency.  FC-like groups (gemm_m == 1)
+    # contribute their full latency.
+    pipeline_fill_frac: float = 0.1
+    # static (leakage + clock-tree) power per core, as a fraction of one
+    # core's peak dynamic power — makes latency savings show up as energy
+    # savings, the dominant effect behind the paper's energy wins.
+    static_frac: float = 0.35
+
+
+# ---------------------------------------------------------------------------
+# Geometry: group -> MG tiles
+# ---------------------------------------------------------------------------
+
+
+def mg_tiles(g: Group, chip: ChipConfig) -> int:
+    """MG-tiles needed to hold one replica of the group's weights."""
+    if not g.is_mvm or g.weight_bytes == 0 and g.macs == 0:
+        return 0
+    cim = chip.core.cim
+    rows, n_out = cim.macro.rows, cim.group_n_out
+    if g.groups == 1:
+        tk = math.ceil(g.gemm_k / rows)
+        tn = math.ceil(g.gemm_n / n_out)
+        return tk * tn
+    # grouped / depth-wise: block-diagonal packing.  Each MG pass computes
+    # ``ch`` conv-groups: their input patches concatenated along rows,
+    # each group's outputs on its own columns.
+    ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
+    if ch >= 1 and g.gemm_k <= rows:
+        return math.ceil(g.groups / ch) * math.ceil(g.gemm_n / n_out)
+    # giant grouped op: fall back to per-group tiling
+    tk = math.ceil(g.gemm_k / rows)
+    tn = math.ceil(g.gemm_n / n_out)
+    return g.groups * tk * tn
+
+
+def column_geometry(g: Group, chip: ChipConfig) -> Tuple[int, int]:
+    """(n_columns, slots_per_column).
+
+    A *column* is the set of k-tiles of one n-tile; its INT32 partial sums
+    accumulate locally, so all its tiles must land on one core (mirrors
+    :func:`repro.core.oplevel._n_tile_columns`).
+    """
+    cim = chip.core.cim
+    rows, n_out = cim.macro.rows, cim.group_n_out
+    if g.groups == 1:
+        return (math.ceil(max(g.gemm_n, 1) / n_out),
+                max(1, math.ceil(g.gemm_k / rows)))
+    ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
+    if g.gemm_k > rows:
+        return (g.groups * math.ceil(max(g.gemm_n, 1) / n_out),
+                math.ceil(g.gemm_k / rows))
+    return math.ceil(g.groups / ch), 1
+
+
+def min_cores(g: Group, chip: ChipConfig) -> int:
+    """Minimum cores to hold one replica (0 for anchor-less groups).
+
+    Column-granular: all k-tiles of an n-column co-locate on one core, so
+    a core hosts ``floor(slots / col_size)`` columns.  Groups whose column
+    exceeds a core's slots (huge-K FC layers) stream in rounds instead.
+    """
+    t = mg_tiles(g, chip)
+    if t == 0:
+        return 1                   # still needs a core to run vector work
+    slots = chip.core.cim.n_macro_groups
+    ncol, colsz = column_geometry(g, chip)
+    per_core = max(1, slots // colsz)
+    return min(math.ceil(ncol / per_core), chip.n_cores)
+
+
+# ---------------------------------------------------------------------------
+# Allocation records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GroupAlloc:
+    """One group's placement within a stage."""
+
+    gid: int
+    tiles: int                 # MG tiles per replica
+    cores: int                 # cores per replica
+    dup: int                   # replicas
+    rounds: int                # weight-streaming rounds (oversized groups)
+    percore_slots: int         # MG slots needed on each allocated core
+    boundary_in: bool          # inputs come from global memory
+    # per-sample cycle components (after duplication)
+    compute: float = 0.0
+    vector: float = 0.0
+    comm: float = 0.0
+    fill_frac: float = 1.0     # chunked-pipelining fill fraction
+    load_bytes: int = 0        # weight bytes fetched at stage start (x dup)
+
+    @property
+    def total_cores(self) -> int:
+        return self.cores * self.dup
+
+    @property
+    def interval(self) -> float:
+        return max(self.compute, self.vector, self.comm)
+
+    @property
+    def latency(self) -> float:
+        return self.compute + self.vector + self.comm
+
+    @property
+    def fill(self) -> float:
+        """Pipeline-fill contribution (row-chunk streaming)."""
+        return self.latency * self.fill_frac
+
+
+@dataclass
+class StagePlan:
+    """A mapped stage with its cost and energy-event ledger."""
+
+    gids: Tuple[int, ...]
+    allocs: List[GroupAlloc]
+    chip: ChipConfig
+    params: CostParams
+    shared_cores: bool = False          # groups time-share cores
+    bases: Optional[List[int]] = None   # base core per alloc (place_stage)
+
+    # -- derived costs -------------------------------------------------------
+
+    @property
+    def cores_used(self) -> int:
+        return min(self.chip.n_cores,
+                   sum(a.total_cores for a in self.allocs))
+
+    @property
+    def interval(self) -> float:
+        """Steady-state cycles per sample."""
+        if self.shared_cores:
+            # groups serialize on shared cores: intervals add, scaled by
+            # how over-subscribed the chip is.
+            tot = sum(a.interval for a in self.allocs)
+            return tot
+        return max((a.interval for a in self.allocs), default=0.0)
+
+    @property
+    def fill(self) -> float:
+        """Latency of the first sample through the stage pipeline.
+
+        Groups stream row-chunks to their successors, so spatial groups
+        contribute only a fraction of their per-sample latency; the last
+        group completes a full sample.
+        """
+        if not self.allocs:
+            return 0.0
+        return (sum(a.fill for a in self.allocs[:-1])
+                + self.allocs[-1].latency)
+
+    @property
+    def load_cycles(self) -> float:
+        """Weight (re)load at stage start (gmem stream + array write)."""
+        chip = self.chip
+        total_bytes = sum(a.load_bytes for a in self.allocs)
+        gmem = total_bytes / (chip.global_mem_ports
+                              * chip.global_mem_bytes_per_cycle)
+        # array row writes happen in parallel across cores
+        cim = chip.core.cim
+        per_core_tiles = max(
+            (math.ceil(a.tiles / max(a.cores, 1)) * a.rounds
+             for a in self.allocs), default=0)
+        write = per_core_tiles * cim.group_load_cycles()
+        return max(gmem, write)
+
+    def latency_cycles(self, batch: Optional[int] = None) -> float:
+        b = batch if batch is not None else self.params.batch
+        return self.load_cycles + self.fill + max(0, b - 1) * self.interval
+
+    # -- energy event ledger (consumed by core.energy) ------------------------
+
+    def energy_events(self, batch: Optional[int] = None) -> Dict[str, float]:
+        b = batch if batch is not None else self.params.batch
+        chip = self.chip
+        ev: Dict[str, float] = {
+            "cim_macro_passes": 0.0, "cim_weight_load_bytes": 0.0,
+            "vector_elems": 0.0, "noc_byte_hops": 0.0,
+            "gmem_bytes": 0.0, "lmem_bytes": 0.0,
+        }
+        cim = chip.core.cim
+        avg_hops = (chip.mesh_rows + chip.mesh_cols) / 3.0
+        for a in self.allocs:
+            g = self._group(a.gid)
+            # one pass activates `tiles` MGs = tiles*macros_per_group macros
+            passes = g.gemm_m * b * a.tiles * cim.macros_per_group
+            ev["cim_macro_passes"] += passes
+            ev["cim_weight_load_bytes"] += a.load_bytes
+            ev["vector_elems"] += g.vector_elems * b
+            halo = self.params.dup_halo if (g.gemm_m > 1 and a.dup > 1) \
+                else 0.0
+            in_traffic = g.in_bytes * (1 + halo * (a.dup - 1) / a.dup) * b
+            if a.boundary_in:
+                ev["gmem_bytes"] += in_traffic
+            else:
+                ev["noc_byte_hops"] += in_traffic * avg_hops
+            ev["lmem_bytes"] += (g.in_bytes + g.out_bytes) * b
+        # boundary outputs spill to gmem (approx: last groups of the stage)
+        member = set(self.gids)
+        for a in self.allocs:
+            g = self._group(a.gid)
+            if not any(s in member for s in self._consumers(g)):
+                ev["gmem_bytes"] += g.out_bytes * b
+        ev["static_core_cycles"] = self.latency_cycles(b) * chip.n_cores
+        return ev
+
+    # -- plumbing -------------------------------------------------------------
+
+    _groups_ref: Optional[CondensedGraph] = None
+
+    def bind(self, cg: CondensedGraph) -> "StagePlan":
+        self._groups_ref = cg
+        return self
+
+    def _group(self, gid: int) -> Group:
+        assert self._groups_ref is not None, "StagePlan not bound to a CG"
+        return self._groups_ref[gid]
+
+    def _consumers(self, g: Group) -> List[int]:
+        assert self._groups_ref is not None
+        return [h.idx for h in self._groups_ref if g.idx in h.preds]
+
+    def describe(self) -> str:
+        rows = [f"stage{{{','.join(map(str, self.gids))}}} "
+                f"cores={self.cores_used} interval={self.interval:.0f} "
+                f"load={self.load_cycles:.0f}"]
+        for a in self.allocs:
+            rows.append(
+                f"  g{a.gid}: tiles={a.tiles} cores={a.cores}x{a.dup}"
+                f" cyc(c/v/m)={a.compute:.0f}/{a.vector:.0f}/{a.comm:.0f}")
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
+# Per-group cycle components
+# ---------------------------------------------------------------------------
+
+
+def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
+                 dup: int, boundary_in: bool) -> GroupAlloc:
+    cim = chip.core.cim
+    tiles = mg_tiles(g, chip)
+    chip_tiles = chip.n_cores * cim.n_macro_groups
+    eff_tiles = min(tiles, chip_tiles)
+    cores = min_cores(g, chip)
+    # weight-streaming rounds: per-core slot pressure at column granularity
+    if tiles:
+        ncol, colsz = column_geometry(g, chip)
+        slots_needed = math.ceil(ncol / cores) * colsz
+        rounds = max(1, math.ceil(slots_needed / cim.n_macro_groups))
+    else:
+        slots_needed = 0
+        rounds = 1
+
+    beats = cim.macro.mvm_beats()
+    interval_beats = cim.macro.act_bits          # pipelined pass interval
+    m_per_rep = math.ceil(g.gemm_m / dup) if g.gemm_m else 0
+    compute = (m_per_rep * interval_beats * rounds
+               + (beats - interval_beats)) if g.is_mvm else 0.0
+
+    lanes = chip.core.vector.lanes
+    vector = g.vector_elems / (lanes * max(cores, 1)) / dup if \
+        g.vector_elems else 0.0
+
+    # Input delivery.  Replicas own disjoint spatial/batch slices: each
+    # receives in_bytes/dup (+ conv halo) over its own mesh port, so the
+    # per-sample comm interval scales down with duplication — this is the
+    # communication side of the paper's duplicate-vs-communicate trade-off.
+    halo = params.dup_halo if (g.gemm_m > 1 and dup > 1) else 0.0
+    in_traffic = g.in_bytes * (1 + halo * (dup - 1) / dup)
+    if boundary_in:
+        bw = chip.global_mem_ports * chip.global_mem_bytes_per_cycle
+        comm = in_traffic / bw          # gmem streams are a shared resource
+    else:
+        bw = chip.noc.link_bytes_per_cycle
+        comm = in_traffic / (bw * dup)
+        comm += chip.noc.router_latency * (chip.mesh_rows + chip.mesh_cols) / 3
+    # output delivery to the next group / gmem, likewise port-parallel
+    comm += g.out_bytes / (chip.noc.link_bytes_per_cycle * dup)
+
+    fill_frac = params.pipeline_fill_frac if g.gemm_m > 4 else 1.0
+    return GroupAlloc(
+        gid=g.idx, tiles=eff_tiles, cores=cores, dup=dup, rounds=rounds,
+        percore_slots=min(slots_needed, cim.n_macro_groups),
+        boundary_in=boundary_in, compute=float(compute), vector=float(vector),
+        comm=float(comm), fill_frac=fill_frac,
+        # every replica fetches the full weights once per stage execution
+        # (oversized groups stream them in rounds, same total bytes)
+        load_bytes=g.weight_bytes * dup)
+
+
+def place_stage(allocs: Sequence["GroupAlloc"],
+                chip: ChipConfig) -> Optional[List[int]]:
+    """First-fit placement of a stage's groups onto the core grid.
+
+    Returns one base core per alloc (replicas occupy consecutive
+    ``cores``-wide windows from there), such that no core's MG-slot
+    occupancy exceeds the CIM unit — or ``None`` if no placement exists.
+    Weight-streaming groups (rounds > 1) require an exclusive window.
+    This is the single source of truth for stage feasibility: the
+    cost model and the code generator both use it.
+    """
+    slots = chip.core.cim.n_macro_groups
+    occ = [0] * chip.n_cores
+    bases: List[int] = []
+    # place big groups first for tighter packing, but report in input order
+    order = sorted(range(len(allocs)),
+                   key=lambda i: -(allocs[i].total_cores * 1000
+                                   + allocs[i].percore_slots))
+    result = [0] * len(allocs)
+    for i in order:
+        a = allocs[i]
+        need = min(a.total_cores, chip.n_cores)
+        placed = False
+        for base in range(0, chip.n_cores - need + 1):
+            window = occ[base:base + need]
+            # exact additive accounting: final per-core occupancy is
+            # order-independent, so codegen (stage order) can never
+            # overflow a placement validated here (size order)
+            if a.rounds > 1:
+                ok = all(o == 0 for o in window)
+            else:
+                ok = all(o + a.percore_slots <= slots for o in window)
+            if ok:
+                for c in range(base, base + need):
+                    occ[c] += slots if a.rounds > 1 else a.percore_slots
+                result[i] = base
+                placed = True
+                break
+        if not placed:
+            return None
+    return result
+
+
+def needs_streaming(g: Group, chip: ChipConfig) -> bool:
+    """Group's columns exceed its minimal allocation's slots -> it must
+    re-stream weights every sample and monopolizes its stage."""
+    if mg_tiles(g, chip) == 0:
+        return False
+    ncol, colsz = column_geometry(g, chip)
+    cores = min_cores(g, chip)
+    return math.ceil(ncol / cores) * colsz > chip.core.cim.n_macro_groups
+
+
+def _stage_feasible(groups: Sequence[Group], chip: ChipConfig) -> bool:
+    """A stage is feasible if its groups jointly fit the chip's MG capacity
+    (time-sharing of cores allowed).  A weight-streaming group (columns
+    exceed its cores' slots) must be alone in its stage."""
+    if any(needs_streaming(g, chip) for g in groups):
+        return len(groups) == 1
+    chip_tiles = chip.n_cores * chip.core.cim.n_macro_groups
+    total = sum(mg_tiles(g, chip) for g in groups)
+    return total <= chip_tiles or len(groups) == 1
+
+
+# ---------------------------------------------------------------------------
+# Mapping strategies
+# ---------------------------------------------------------------------------
+
+
+def _boundary_flags(groups: Sequence[Group], stage_set: set) -> Dict[int, bool]:
+    flags = {}
+    for g in groups:
+        flags[g.idx] = (not g.preds) or any(p not in stage_set
+                                            for p in g.preds)
+    return flags
+
+
+def generic_mapping(cg: CondensedGraph, gids: Sequence[int],
+                    chip: ChipConfig, params: CostParams) -> Optional[StagePlan]:
+    """Baseline 1 (§IV-B): inter-layer pipeline, **no duplication**."""
+    groups = [cg[i] for i in gids]
+    if not _stage_feasible(groups, chip):
+        return None
+    stage_set = set(gids)
+    flags = _boundary_flags(groups, stage_set)
+    allocs = [_alloc_group(g, chip, params, dup=1,
+                           boundary_in=flags[g.idx]) for g in groups]
+    bases = place_stage(allocs, chip)
+    if bases is None:
+        return None
+    shared = sum(a.total_cores for a in allocs) > chip.n_cores
+    return StagePlan(tuple(gids), allocs, chip, params,
+                     shared_cores=shared, bases=bases).bind(cg)
+
+
+def _improve_duplication(cg: CondensedGraph, allocs: List[GroupAlloc],
+                         chip: ChipConfig, params: CostParams,
+                         flags: Dict[int, bool]) -> List[GroupAlloc]:
+    """Greedy duplication hillclimb: repeatedly replicate the bottleneck
+    group while cores remain and the stage interval improves."""
+    def used() -> int:
+        return sum(a.total_cores for a in allocs)
+
+    while True:
+        free = chip.n_cores - used()
+        if free <= 0:
+            break
+        # current bottleneck
+        order = sorted(range(len(allocs)), key=lambda i: -allocs[i].interval)
+        improved = False
+        for i in order:
+            a = allocs[i]
+            g = cg[a.gid]
+            # duplication splits gemm_m positions and/or batch samples
+            dup_cap = min(params.max_dup, max(g.gemm_m, 1) * params.batch)
+            if not g.is_mvm or a.dup >= dup_cap or a.rounds > 1:
+                continue
+            if a.cores > free:
+                continue
+            cand = _alloc_group(g, chip, params, dup=a.dup + 1,
+                                boundary_in=flags[a.gid])
+            if cand.interval < a.interval - 1e-9:
+                trial = list(allocs)
+                trial[i] = cand
+                if place_stage(trial, chip) is None:
+                    continue
+                allocs[i] = cand
+                improved = True
+                break
+        if not improved:
+            break
+    return allocs
+
+
+def optimal_mapping(cg: CondensedGraph, gids: Sequence[int],
+                    chip: ChipConfig, params: CostParams) -> Optional[StagePlan]:
+    """The paper's ``OptimalMapping(stage, R)``: joint core allocation +
+    weight duplication minimizing the stage's steady-state interval."""
+    base = generic_mapping(cg, gids, chip, params)
+    if base is None:
+        return None
+    if base.shared_cores:
+        return base            # no spare cores to duplicate into
+    stage_set = set(gids)
+    flags = _boundary_flags([cg[i] for i in gids], stage_set)
+    allocs = _improve_duplication(cg, list(base.allocs), chip, params, flags)
+    bases = place_stage(allocs, chip)
+    if bases is None:           # should not happen (hillclimb checked)
+        return base
+    return StagePlan(tuple(gids), allocs, chip, params,
+                     bases=bases).bind(cg)
+
+
+def opportunistic_mapping(cg: CondensedGraph, gids: Sequence[int],
+                          chip: ChipConfig,
+                          params: CostParams) -> Optional[StagePlan]:
+    """Baseline 2 (§IV-B, CIM-MLC style): capacity-first partition given,
+    then *opportunistic* duplication into whatever cores remain vacant.
+
+    Identical duplication mechanics to :func:`optimal_mapping` — the
+    difference is upstream: the partition was chosen greedily by capacity,
+    not by the DP, so packed stages rarely have vacant cores.
+    """
+    return optimal_mapping(cg, gids, chip, params)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the CIM kernels.
+
+Digital CIM is *exact* integer arithmetic: the bit-serial decomposition
+must reproduce a plain INT32 matmul bit-for-bit.  These references define
+the contract the Pallas kernels (and the CIMFlow functional simulator's
+macro model) are tested against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mvm_ref", "bitserial_mvm_ref", "quantized_linear_ref",
+           "requant_ref"]
+
+
+def mvm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """INT32 ground truth: ``(M,K) int8 @ (K,N) int8 -> (M,N) int32``."""
+    return jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def bitserial_mvm_ref(x: jax.Array, w: jax.Array, act_bits: int = 8,
+                      signed: bool = True) -> jax.Array:
+    """Bit-plane decomposition in plain jnp (mirrors the macro model)."""
+    xu = x.astype(jnp.uint8).astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    w32 = w.astype(jnp.int32)
+    for b in range(act_bits):
+        plane = ((xu >> b) & 1).astype(jnp.int32)
+        term = plane @ w32
+        acc = acc - (term << b) if (signed and b == act_bits - 1) \
+            else acc + (term << b)
+    return acc
+
+
+def requant_ref(acc: jax.Array, scale: int, shift: int,
+                div: int = 1) -> jax.Array:
+    """Fixed-point requant, identical to the ISS / compiled semantics."""
+    den = div << shift
+    q = (acc.astype(jnp.int64) * scale + (den >> 1)) // den
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def quantized_linear_ref(x: jax.Array, w_int8: jax.Array, w_scale,
+                         act_scale) -> jax.Array:
+    """Fake-quant linear: float in/out, INT8 CIM arithmetic inside."""
+    xq = jnp.clip(jnp.round(x / act_scale), -128, 127).astype(jnp.int8)
+    acc = mvm_ref(xq, w_int8)
+    return acc.astype(jnp.float32) * (act_scale * w_scale)

@@ -1,0 +1,281 @@
+"""Per-architecture sharding rules (PartitionSpec trees).
+
+Weight sharding is Megatron-style tensor parallelism over the ``model``
+axis (column-parallel up-projections, row-parallel down-projections,
+expert-sharded MoE, vocab-sharded embeddings) with a **divisibility
+fallback**: any dimension the 16-way axis does not divide falls back to
+the next candidate (e.g. attention shards heads when ``H % tp == 0``,
+else head_dim, else replicates) — so every assigned architecture
+compiles on the fixed production mesh without padding its published
+hyper-parameters.  The fallback decisions are logged into the spec tree
+and surface in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .mesh import MODEL_AXIS, data_axes_of
+
+__all__ = ["param_specs", "batch_specs", "decode_state_specs",
+           "opt_state_specs", "named", "head_sharding_choice"]
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape[MODEL_AXIS]
+
+
+def head_sharding_choice(cfg: ArchConfig, mesh: Mesh) -> str:
+    """heads | head_dim | replicated — the attention fallback chain."""
+    tp = _tp(mesh)
+    n_heads = cfg.n_heads
+    kvh = cfg.n_kv_heads
+    if cfg.mla is not None:
+        return "heads" if n_heads % tp == 0 else (
+            "head_dim" if cfg.mla.v_head_dim % tp == 0 else "replicated")
+    if n_heads % tp == 0 and kvh % tp == 0:
+        return "heads"
+    if cfg.hd % tp == 0:
+        return "head_dim"
+    return "replicated"
+
+
+def _col(tp: int, dim: int) -> P:
+    """Column-parallel (shard the output dim) when divisible."""
+    return P(None, MODEL_AXIS) if dim % tp == 0 else P(None, None)
+
+
+def _row(tp: int, dim: int) -> P:
+    return P(MODEL_AXIS, None) if dim % tp == 0 else P(None, None)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching ``transformer.init_params``."""
+    tp = _tp(mesh)
+    d, hd = cfg.d_model, cfg.hd
+
+    def block_specs() -> Dict[str, Any]:
+        bs: Dict[str, Any] = {}
+        for i, ch in enumerate(cfg.block_pattern):
+            bs[f"norm{i}"] = _norm()
+            if ch == "A":
+                if cfg.mla is not None:
+                    m = cfg.mla
+                    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    bs[f"attn{i}"] = {
+                        "wq_a": P(None, None),
+                        "wq_b": _col(tp, cfg.n_heads * qk),
+                        "wkv_a": P(None, None),
+                        "wkv_b": _col(tp, cfg.n_heads
+                                      * (m.qk_nope_head_dim
+                                         + m.v_head_dim)),
+                        "wo": _row(tp, cfg.n_heads * m.v_head_dim),
+                        "q_norm": P(None),
+                        "kv_norm": P(None),
+                    }
+                else:
+                    bs[f"attn{i}"] = {
+                        "wq": _col(tp, cfg.n_heads * hd),
+                        "wk": _col(tp, cfg.n_kv_heads * hd),
+                        "wv": _col(tp, cfg.n_kv_heads * hd),
+                        "wo": _row(tp, cfg.n_heads * hd),
+                    }
+                if cfg.encoder_layers:
+                    bs[f"xnorm{i}"] = _norm()
+                    bs[f"xattn{i}"] = dict(bs[f"attn{i}"])
+            else:
+                s = cfg.ssm
+                d_in = s.expand * d
+                nh = d_in // s.head_dim
+                proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+                conv_dim = d_in + 2 * s.n_groups * s.d_state
+                bs[f"ssm{i}"] = {
+                    "in_proj": _col(tp, proj_out),
+                    "conv_w": P(None, MODEL_AXIS)
+                    if conv_dim % tp == 0 else P(None, None),
+                    "conv_b": P(None),
+                    "A_log": P(None), "D": P(None), "dt_bias": P(None),
+                    "norm_w": P(None),
+                    "out_proj": _row(tp, d_in),
+                }
+            if f"mlp{i}" in _ffn_keys(cfg, i) or \
+                    f"moe{i}" in _ffn_keys(cfg, i):
+                bs[f"fnorm{i}"] = _norm()
+                if _ffn_keys(cfg, i) == {f"moe{i}"}:
+                    m = cfg.moe
+                    espec = P(MODEL_AXIS, None, None) \
+                        if m.n_experts % tp == 0 else P(None, None, None)
+                    moe_spec: Dict[str, Any] = {
+                        "router": P(None, None),
+                        "wi": espec, "wg": espec, "wo": espec,
+                    }
+                    if m.n_shared_experts:
+                        moe_spec["shared"] = _mlp_spec(
+                            cfg, tp,
+                            (m.shared_d_ff or m.d_ff)
+                            * m.n_shared_experts)
+                    bs[f"moe{i}"] = moe_spec
+                else:
+                    bs[f"mlp{i}"] = _mlp_spec(cfg, tp, cfg.d_ff)
+        return bs
+
+    def _norm():
+        return ({"w": P(None), "b": P(None)} if cfg.norm == "layernorm"
+                else {"w": P(None)})
+
+    def _mlp_spec(cfg, tp, f):
+        sp = {"wi": _col(tp, f), "wo": _row(tp, f)}
+        if cfg.act == "swiglu":
+            sp["wg"] = _col(tp, f)
+        return sp
+
+    def _ffn_keys(cfg, i):
+        if cfg.family == "ssm":
+            return set()
+        if cfg.moe is not None and i % max(cfg.moe.moe_stride, 1) == 0:
+            return {f"moe{i}"}
+        return {f"mlp{i}"}
+
+    # embeddings: vocab-sharded when divisible, else d_model, else full
+    if cfg.vocab % tp == 0:
+        embed = P(MODEL_AXIS, None)
+    elif d % tp == 0:
+        embed = P(None, MODEL_AXIS)
+    else:
+        embed = P(None, None)
+
+    specs: Dict[str, Any] = {
+        "embed": embed,
+        "final_norm": _norm(),
+        # stacked block params get a leading None for the scan dim
+        "blocks": jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                               block_specs(),
+                               is_leaf=lambda x: isinstance(x, P)),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = _col(tp, cfg.vocab)
+    if cfg.encoder_layers:
+        enc = {
+            "norm0": _norm(),
+            "attn0": {"wq": _col(tp, cfg.n_heads * hd),
+                      "wk": _col(tp, cfg.n_kv_heads * hd),
+                      "wv": _col(tp, cfg.n_kv_heads * hd),
+                      "wo": _row(tp, cfg.n_heads * hd)},
+            "fnorm0": _norm(),
+            "mlp0": _mlp_spec(cfg, tp, cfg.d_ff),
+        }
+        specs["enc_blocks"] = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), enc,
+            is_leaf=lambda x: isinstance(x, P))
+        specs["enc_norm"] = _norm()
+    if cfg.vision_tokens:
+        specs["vis_proj"] = P(None, None)
+    if cfg.mtp:
+        specs["mtp"] = {"norm": _norm(), "proj": P(None, None)}
+    return specs
+
+
+def usable_data_axes(mesh: Mesh, batch: Optional[int]
+                     ) -> Tuple[str, ...]:
+    """Data axes whose product divides the batch (else drop axes from the
+    left: long_500k's single request replicates over the batch axes)."""
+    dp = data_axes_of(mesh)
+    if batch is None:
+        return dp
+    while dp and batch % int(np.prod([mesh.shape[a] for a in dp])):
+        dp = dp[1:]
+    return dp
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh,
+                batch: Optional[int] = None) -> Dict[str, P]:
+    dp = usable_data_axes(mesh, batch)
+    out = {"tokens": P(dp, None)}
+    if cfg.encoder_layers:
+        out["frames"] = P(dp, None, None)
+    if cfg.vision_tokens:
+        out["patches"] = P(dp, None, None)
+    return out
+
+
+def decode_state_specs(cfg: ArchConfig, mesh: Mesh,
+                       batch: Optional[int] = None) -> Dict[str, Any]:
+    """Specs for ``transformer.init_decode_state`` pytrees."""
+    dp = usable_data_axes(mesh, batch)
+    tp = _tp(mesh)
+    choice = head_sharding_choice(cfg, mesh)
+    if cfg.mla is not None:
+        attn_spec = {"c_kv": P(None, dp, None, None),
+                     "k_rope": P(None, dp, None, None, None)}
+    elif choice == "heads":
+        attn_spec = {"k": P(None, dp, None, MODEL_AXIS, None),
+                     "v": P(None, dp, None, MODEL_AXIS, None)}
+    elif choice == "head_dim":
+        attn_spec = {"k": P(None, dp, None, None, MODEL_AXIS),
+                     "v": P(None, dp, None, None, MODEL_AXIS)}
+    else:
+        attn_spec = {"k": P(None, dp, None, None, None),
+                     "v": P(None, dp, None, None, None)}
+    caches: Dict[str, Any] = {}
+    for i, ch in enumerate(cfg.block_pattern):
+        if ch == "A":
+            caches[f"attn{i}"] = attn_spec
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            caches[f"ssm{i}"] = {
+                "h": P(None, dp, MODEL_AXIS if nh % tp == 0 else None,
+                       None, None),
+                "conv": P(None, dp, None, None),
+            }
+    out = {"caches": caches, "pos": P()}
+    if cfg.encoder_layers:
+        out["enc"] = P(dp, None, None)
+    return out
+
+
+def opt_state_specs(pspecs: Any) -> Dict[str, Any]:
+    """AdamW state mirrors the parameter sharding."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def fsdp_specs(specs: Any, abstract_params: Any, mesh: Mesh) -> Any:
+    """§Perf knob (ZeRO-3-style): additionally shard each parameter's
+    largest still-replicated dimension over the data axis.  XLA inserts
+    the per-layer all-gathers / grad reduce-scatters; capacity drops by
+    ~the data-axis size."""
+    daxes = data_axes_of(mesh)
+    if not daxes:
+        return specs
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def up(spec, p):
+        dims = p.shape
+        if len(dims) < 2:
+            return spec
+        best = None
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(dims)
+                                                        - len(spec))):
+            if ax is None and dims[i] % dsize == 0:
+                if best is None or dims[i] > dims[best]:
+                    best = i
+        if best is None:
+            return spec
+        new = list(tuple(spec) + (None,) * (len(dims) - len(spec)))
+        new[best] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*new)
+
+    return jax.tree.map(up, specs, abstract_params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,181 @@
+"""Jitted, sharded train / prefill / decode steps.
+
+``make_*_step`` return ``(fn, in_shardings, out_shardings, abstract
+inputs)`` so the same builders serve the real drivers *and* the dry-run
+(``fn.lower(*specs).compile()``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import model_zoo, transformer as T
+from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+from . import meshctx, sharding, tuning
+from .mesh import MODEL_AXIS, data_axes_of
+from .sharding import usable_data_axes
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "abstract_params", "abstract_opt_state", "abstract_state"]
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStructs of the parameter tree (no allocation).
+
+    Under the ``int8_weights`` tuning knob, 2-D+ float leaves become
+    INT8 storage (dequantized at use by ``transformer.cast_params``)."""
+    tree = jax.eval_shape(lambda: T.init_params(
+        cfg, jax.random.PRNGKey(0)))
+    if tuning.FLAGS["int8_weights"]:
+        def q(s):
+            if s.ndim >= 2 and jnp.issubdtype(s.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(s.shape, jnp.int8)
+            return s
+        tree = jax.tree.map(q, tree)
+    return tree
+
+
+def abstract_opt_state(cfg: ArchConfig, adamw: AdamWConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+        adamw))
+
+
+def abstract_state(cfg: ArchConfig, batch: int, seq: int):
+    def build():
+        enc = (jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                         jnp.dtype(cfg.compute_dtype))
+               if cfg.encoder_layers else None)
+        return T.init_decode_state(cfg, {}, batch, seq, enc=enc)
+    return jax.eval_shape(build)
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh,
+                    shape: ShapeConfig,
+                    adamw: AdamWConfig = AdamWConfig(),
+                    lr_peak: float = 3e-4, warmup: int = 200,
+                    total_steps: int = 10_000):
+    """Returns (jitted step, abstract (params, opt, batch, step))."""
+    pspecs = sharding.param_specs(cfg, mesh)
+    if tuning.FLAGS["fsdp_params"]:
+        pspecs = sharding.fsdp_specs(pspecs, abstract_params(cfg), mesh)
+    ospecs = sharding.opt_state_specs(pspecs)
+    bspecs = sharding.batch_specs(cfg, mesh, shape.global_batch)
+    dp = usable_data_axes(mesh, shape.global_batch)
+
+    def train_step(params, opt_state, batch, step):
+        with_ctx = functools.partial(T.loss_fn, cfg)
+        loss, grads = jax.value_and_grad(with_ctx)(params, batch)
+        lr = cosine_warmup(step, peak=lr_peak, warmup=warmup,
+                           total=total_steps)
+        new_p, new_o, metrics = adamw_update(grads, opt_state, params,
+                                             lr, adamw)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return new_p, new_o, metrics
+
+    ns = lambda t: sharding.named(mesh, t)           # noqa: E731
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs),
+                      NamedSharding(mesh, P())),
+        out_shardings=(ns(pspecs), ns(ospecs),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    abstract = (
+        abstract_params(cfg),
+        abstract_opt_state(cfg, adamw),
+        _sds(model_zoo.batch_spec(cfg, shape.global_batch,
+                                  shape.seq_len)),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return jitted, abstract
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig):
+    """Full-sequence prefill lowering to last-token logits.
+
+    The vocabulary projection applies to the final position only, so the
+    (B, S, V) logits tensor never materializes at 32k context.
+    """
+    pspecs = sharding.param_specs(cfg, mesh)
+    if tuning.FLAGS["fsdp_params"]:
+        pspecs = sharding.fsdp_specs(pspecs, abstract_params(cfg), mesh)
+    bspecs = sharding.batch_specs(cfg, mesh, shape.global_batch)
+    dp = usable_data_axes(mesh, shape.global_batch)
+
+    def prefill_step(params, batch):
+        params = T.cast_params(cfg, params)
+        x, enc = T._embed_inputs(cfg, params, batch)
+
+        def body(x, bp):
+            return T._block_apply(cfg, bp, x, enc=enc)
+
+        body = jax.checkpoint(body, policy=T._remat_policy())
+        x, _ = jax.lax.scan(body, x, params["blocks"],
+                            unroll=T._AFLAGS["scan_unroll"])
+        x = T.L.apply_norm(cfg, params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(x.dtype)
+        return (x[:, -1:] @ head)[:, 0].astype(jnp.float32)
+
+    jitted = jax.jit(
+        prefill_step,
+        in_shardings=(sharding.named(mesh, pspecs),
+                      sharding.named(mesh, bspecs)),
+        out_shardings=NamedSharding(mesh, P(dp, None)),
+    )
+    abstract = (abstract_params(cfg),
+                _sds(model_zoo.batch_spec(cfg, shape.global_batch,
+                                          shape.seq_len)))
+    return jitted, abstract
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh, shape: ShapeConfig):
+    """One new token against a pre-allocated ``seq_len`` KV cache/state."""
+    pspecs = sharding.param_specs(cfg, mesh)
+    if tuning.FLAGS["fsdp_params"]:
+        pspecs = sharding.fsdp_specs(pspecs, abstract_params(cfg), mesh)
+    sspecs = sharding.decode_state_specs(cfg, mesh, shape.global_batch)
+    dp = usable_data_axes(mesh, shape.global_batch)
+
+    def decode(params, state, token):
+        return T.decode_step(cfg, params, state, token)
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(sharding.named(mesh, pspecs),
+                      sharding.named(mesh, sspecs),
+                      NamedSharding(mesh, P(dp, None))),
+        out_shardings=(NamedSharding(mesh, P(dp, None)),
+                       sharding.named(mesh, sspecs)),
+        donate_argnums=(1,),
+    )
+    abstract = (
+        abstract_params(cfg),
+        abstract_state(cfg, shape.global_batch, shape.seq_len),
+        jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+    )
+    return jitted, abstract

@@ -1,0 +1,545 @@
+"""Shared neural building blocks (pure-functional JAX, explicit params).
+
+Everything is a (init, apply) pair over plain dicts of arrays — no
+framework dependency.  Attention supports GQA, causal/sliding-window
+masks, KV caches, cross-attention, MLA (DeepSeek latent attention), and a
+blockwise *flash-style* path (online softmax over KV chunks via
+``lax.scan``) that keeps long-context prefill memory O(S·block) instead
+of O(S²).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig, MlaConfig
+from .analysis_flags import FLAGS as _AFLAGS
+
+__all__ = [
+    "dense_init", "rmsnorm", "layernorm", "norm_init", "apply_norm",
+    "rope_tables", "apply_rope", "attention_init", "attention_apply",
+    "attention_decode", "mla_init", "mla_apply", "mla_decode",
+    "mlp_init", "mlp_apply", "moe_init", "moe_apply", "flash_attention",
+]
+
+Params = Dict[str, Any]
+
+# Use the flash path once the KV length exceeds this.
+FLASH_THRESHOLD = 2048
+FLASH_BLOCK_Q = 512
+FLASH_BLOCK_K = 1024
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ArchConfig, d: int, dtype) -> Params:
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32) \
+        + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg: ArchConfig, p: Params, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions; dim = rotary dimension."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv     # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; cos/sin: (S, D/2)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    c = cos[..., None, :].astype(x.dtype)       # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / SWA / cross) with flash path
+# ---------------------------------------------------------------------------
+
+
+def attention_init(cfg: ArchConfig, key, dtype,
+                   cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _gqa_scores_ctx(q, k, v, mask_fn, q_pos0: int):
+    """Naive path: q (B,Sq,KV,G,D), k/v (B,Sk,KV,D)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
+    sq, sk = q.shape[1], k.shape[1]
+    qi = q_pos0 + jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    scores = jnp.where(mask_fn(qi, ki), scores.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def flash_attention(q, k, v, mask_fn, q_pos0: int = 0,
+                    block_q: int = FLASH_BLOCK_Q,
+                    block_k: int = FLASH_BLOCK_K):
+    """Blockwise online-softmax attention (memory O(S·block)).
+
+    q: (B, Sq, KV, G, D); k, v: (B, Sk, KV, D).  ``mask_fn(qi, ki)`` is a
+    boolean predicate on absolute positions.  Implemented as a scan over
+    KV blocks inside a scan over Q blocks — this is the paper-agnostic
+    "beyond-paper" optimization that makes prefill_32k/long-context cells
+    tractable (see EXPERIMENTS.md §Perf).
+    """
+    b, sq, kv, g, d = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]                    # may differ from d (MLA)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = -(-sq // block_q)
+    nk = -(-sk // block_k)
+    pad_q = nq * block_q - sq
+    pad_k = nk * block_k - sk
+    scale = 1.0 / math.sqrt(d)
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qb = qp.reshape(b, nq, block_q, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(b, nk, block_k, kv, d).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nk, block_k, kv, dv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk                       # qblk (B,bq,KV,G,D)
+
+        def kv_step(carry, ki_kvb):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kvb
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk) * scale
+            qpos = q_pos0 + qi * block_q + jnp.arange(block_q)[:, None]
+            kpos = (ki * block_k + jnp.arange(block_k))[None, :]
+            valid = mask_fn(qpos, kpos) & (kpos < sk)
+            s = jnp.where(valid, s.astype(jnp.float32), -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qblk.dtype),
+                            vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, block_q, dv), qblk.dtype)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)   # (B,bq,KV,G,D)
+
+    _, blocks = lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, kv,
+                                                     g, dv)
+    return out[:, :sq]
+
+
+def _mask_fn(cfg: ArchConfig, causal: bool):
+    win = cfg.sliding_window
+
+    def fn(qi, ki):
+        ok = jnp.ones(jnp.broadcast_shapes(qi.shape, ki.shape), bool)
+        if causal:
+            ok &= ki <= qi
+        if win is not None:
+            ok &= ki > qi - win
+        return ok
+
+    return fn
+
+
+def attention_apply(cfg: ArchConfig, p: Params, x, *, causal: bool = True,
+                    kv_src: Optional[jax.Array] = None,
+                    positions: Optional[jax.Array] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, s, d = x.shape
+    hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    g = h // kvh
+    src = x if kv_src is None else kv_src
+    sk = src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, kvh, g, hd)
+    k = (src @ p["wk"]).reshape(b, sk, kvh, hd)
+    v = (src @ p["wv"]).reshape(b, sk, kvh, hd)
+    if use_rope:
+        qpos = positions if positions is not None else jnp.arange(s)
+        cos_q, sin_q = rope_tables(qpos, hd, cfg.rope_theta)
+        cos_k, sin_k = rope_tables(jnp.arange(sk), hd, cfg.rope_theta)
+        q = apply_rope(q.reshape(b, s, kvh * g, hd), cos_q, sin_q) \
+            .reshape(b, s, kvh, g, hd)
+        k = apply_rope(k, cos_k, sin_k)
+    mfn = _mask_fn(cfg, causal and kv_src is None)
+    q, k, v, unshard = _maybe_seq_parallel(q, k, v)
+    if sk > FLASH_THRESHOLD and not _AFLAGS["naive_attention"]:
+        ctx = flash_attention(q, k, v, mfn)
+    else:
+        ctx = _gqa_scores_ctx(q, k, v, mfn, 0)
+    ctx = unshard(ctx)
+    return ctx.reshape(b, s, h * hd) @ p["wo"]
+
+
+def _maybe_seq_parallel(q, k, v):
+    """§Perf knob: reshard attention sequence-wise over the model axis.
+
+    The head_dim fallback sharding psums every (S, S) score tile — an
+    S²-scaling collective.  Sequence sharding costs one S-linear
+    all-to-all each way instead: q is sharded on its seq dim, k/v are
+    replicated over 'model', each chip computes full-head attention for
+    its sequence slice.
+    """
+    from ..launch import meshctx, tuning
+    ctx = meshctx.current()
+    if not tuning.FLAGS["attn_seq_parallel"] or ctx is None:
+        return q, k, v, lambda c: c
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh, dp, mp = ctx.mesh, ctx.data_axes, ctx.model_axis
+    if q.shape[1] % mesh.shape[mp]:
+        return q, k, v, lambda c: c          # seq not divisible: keep
+    ns = lambda spec: NamedSharding(mesh, spec)      # noqa: E731
+    q = lax.with_sharding_constraint(
+        q, ns(P(dp, mp, None, None, None)))
+    k = lax.with_sharding_constraint(k, ns(P(dp, None, None, None)))
+    v = lax.with_sharding_constraint(v, ns(P(dp, None, None, None)))
+
+    def unshard(c):
+        # back to head-sharded layout for the row-parallel wo matmul
+        return lax.with_sharding_constraint(
+            c, ns(P(dp, None, None, None, mp)))
+
+    return q, k, v, unshard
+
+
+def _kv_store(x, store_dtype):
+    """§Perf int8_kv_cache knob: symmetric INT8 (fixed 1/64 scale
+    stand-in; production calibrates per head via repro.quant)."""
+    if store_dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * 64.0),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(store_dtype)
+
+
+def _kv_load(c, compute_dtype):
+    if c.dtype == jnp.int8:
+        return c.astype(compute_dtype) * jnp.asarray(1.0 / 64,
+                                                     compute_dtype)
+    return c.astype(compute_dtype)
+
+
+def attention_decode(cfg: ArchConfig, p: Params, x, cache: Params,
+                     pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """Single-token decode with a (possibly ring-buffered) KV cache.
+
+    ``cache = {"k": (B, S_cache, KV, D), "v": ..., }``; ``pos`` is the
+    absolute position of the incoming token (scalar int32).  For
+    sliding-window archs the cache holds only ``window`` slots and is
+    written ring-wise — long_500k memory stays O(window).
+    """
+    b, one, d = x.shape
+    hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    g = h // kvh
+    s_cache = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, kvh, g, hd)
+    k = (x @ p["wk"]).reshape(b, 1, kvh, hd)
+    v = (x @ p["wv"]).reshape(b, 1, kvh, hd)
+    cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q.reshape(b, 1, h, hd), cos, sin).reshape(
+        b, 1, kvh, g, hd)
+    k = apply_rope(k, cos, sin)
+    slot = pos % s_cache                      # ring index (== pos if full)
+    ck = lax.dynamic_update_slice(cache["k"],
+                                  _kv_store(k, cache["k"].dtype),
+                                  (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"],
+                                  _kv_store(v, cache["v"].dtype),
+                                  (0, slot, 0, 0))
+    # absolute position of each cache slot under ring addressing
+    idx = jnp.arange(s_cache)
+    wraps = (pos // s_cache) * s_cache
+    abs_pos = jnp.where(idx <= slot, wraps + idx, wraps - s_cache + idx)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.sliding_window is not None:
+        valid &= abs_pos > pos - cfg.sliding_window
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q,
+                        _kv_load(ck, q.dtype)) * scale
+    scores = jnp.where(valid[None, None, None, None, :],
+                       scores.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, _kv_load(cv, q.dtype))
+    out = ctx.reshape(b, 1, h * hd) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ArchConfig, key, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk, dtype),
+        "wkv_a": dense_init(ks[2], d,
+                            m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                            h * (m.qk_nope_head_dim + m.v_head_dim),
+                            dtype),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+    }
+
+
+def _mla_qkv(cfg: ArchConfig, p: Params, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q = rmsnorm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = x @ p["wkv_a"]
+    c_kv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"])
+    k_rope = kv[..., m.kv_lora_rank:].reshape(b, s, 1, dr)
+    cos, sin = rope_tables(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand(cfg: ArchConfig, p: Params, c_kv):
+    m = cfg.mla
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    dn, dv = m.qk_nope_head_dim, m.v_head_dim
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_apply(cfg: ArchConfig, p: Params, x, *,
+              positions: Optional[jax.Array] = None) -> jax.Array:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    pos = positions if positions is not None else jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, pos)
+    k_nope, v = _mla_expand(cfg, p, c_kv)
+    # fold into the generic GQA shapes: kv-heads == n_heads here
+    q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :] \
+        .transpose(0, 1, 2, 3, 4)                  # (B,S,H,1,dn+dr)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (b, s, h,
+                                                   k_rope.shape[-1]))],
+                        -1)
+    q = q.reshape(b, s, h, 1, -1)
+    mfn = _mask_fn(cfg, True)
+    if s > FLASH_THRESHOLD and not _AFLAGS["naive_attention"]:
+        ctx = flash_attention(q, k, v, mfn)
+    else:
+        ctx = _gqa_scores_ctx(q, k, v, mfn, 0)
+    return ctx.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+
+
+def mla_decode(cfg: ArchConfig, p: Params, x, cache: Params,
+               pos: jax.Array) -> Tuple[jax.Array, Params]:
+    """Latent-cache decode in the **absorbed** formulation.
+
+    The up-projections fold into the query/context sides —
+    ``q^T (W_uk c) = (W_uk^T q)^T c`` and ``Σ_s p_s (W_uv c_s) =
+    W_uv (Σ_s p_s c_s)`` — so attention runs entirely in the 512-dim
+    latent space and nothing of size (B, S, H, d) ever materializes.
+    This is the MLA memory/bandwidth win the cache exists for.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, pos[None])
+    cc = lax.dynamic_update_slice(cache["c_kv"],
+                                  c_kv.astype(cache["c_kv"].dtype),
+                                  (0, pos, 0))
+    cr = lax.dynamic_update_slice(cache["k_rope"],
+                                  k_rope.astype(cache["k_rope"].dtype),
+                                  (0, pos, 0, 0))
+    w_kv = p["wkv_b"].reshape(m.kv_lora_rank, h, dn + dv)
+    w_k, w_v = w_kv[..., :dn], w_kv[..., dn:]
+    # absorb W_uk into the query; scores in latent space
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_k)
+    lat = cc.astype(x.dtype)                       # (B, S, 512)
+    rope = cr.astype(x.dtype)[:, :, 0]             # (B, S, dr)
+    scale = 1.0 / math.sqrt(dn + dr)
+    scores = (jnp.einsum("bhl,bsl->bhs", q_lat, lat)
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], rope)) * scale
+    valid = jnp.arange(lat.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores.astype(jnp.float32),
+                       -1e30)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", probs, lat)
+    ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_v)
+    out = ctx.reshape(b, 1, h * dv) @ p["wo"]
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ArchConfig, key, dtype, d_ff: Optional[int] = None
+             ) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    return {"wi": dense_init(ks[0], d, f, dtype),
+            "wo": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_apply(cfg: ArchConfig, p: Params, x) -> jax.Array:
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (dense one-hot dispatch — TPU-friendly, static shapes)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(cfg: ArchConfig, key, dtype) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    sf = m.shared_d_ff or m.d_ff
+
+    def ex(key, n, fin, fout):
+        return (jax.random.normal(key, (n, fin, fout), jnp.float32)
+                / math.sqrt(fin)).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, dtype),
+        "wi": ex(ks[1], m.n_experts, d, m.d_ff),
+        "wg": ex(ks[2], m.n_experts, d, m.d_ff),
+        "wo": ex(ks[3], m.n_experts, m.d_ff, d),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(cfg, ks[4], dtype,
+                               d_ff=sf * m.n_shared_experts)
+    return p
+
+
+def moe_apply(cfg: ArchConfig, p: Params, x) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss).
+
+    Under an active mesh context this dispatches to the expert-parallel
+    shard_map path (:mod:`repro.models.moe_ep`); otherwise it uses the
+    dense one-hot reference dispatch (smoke-test scale only — the dense
+    path materializes ``(T, E, f)``).
+    """
+    from ..launch import meshctx
+    ctx = meshctx.current()
+    if ctx is not None:
+        from .moe_ep import moe_ep_apply_local
+        from jax.sharding import PartitionSpec as P
+        dp = ctx.data_axes
+        mp = ctx.model_axis
+        espec = P(mp, None, None)
+        in_specs = (P(dp, None, None),
+                    {"router": P(), "wi": espec, "wg": espec,
+                     "wo": espec,
+                     **({"shared": P()} if "shared" in p else {})})
+        fn = jax.shard_map(
+            lambda xx, pp: moe_ep_apply_local(cfg, pp, xx, axis=mp,
+                                              data_axes=dp),
+            mesh=ctx.mesh, in_specs=in_specs,
+            out_specs=(P(dp, None, None), P()))
+        return fn(x, p)
+    m = cfg.moe
+    b, s, d = x.shape
+    logits = (x @ p["router"]).astype(jnp.float32)      # (B,S,E)
+    if m.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(scores, m.experts_per_tok)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    # combine weights (B,S,E): scatter the top-k gates
+    comb = jnp.sum(jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32)
+                   * gates[..., None], axis=2)          # (B,S,E)
+    comb = comb.astype(x.dtype)
+    h = jnp.einsum("bsd,edf->bsef", x, p["wg"])
+    hi = jnp.einsum("bsd,edf->bsef", x, p["wi"])
+    act = jax.nn.silu(h) * hi
+    y = jnp.einsum("bsef,efd->bsed", act, p["wo"])
+    out = jnp.einsum("bsed,bse->bsd", y, comb)
+    if "shared" in p:
+        out = out + mlp_apply(cfg, p["shared"], x)
+    # Switch-style load-balance aux loss
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], m.n_experts), axis=(0, 1))
+    pe = jnp.mean(jax.nn.softmax(logits, -1), axis=(0, 1))
+    aux = m.n_experts * jnp.sum(me * pe)
+    return out, aux

@@ -1,0 +1,49 @@
+"""Convenience layer over the unified model: init + dummy batches."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import transformer as T
+
+__all__ = ["init", "dummy_batch", "batch_spec"]
+
+
+def init(cfg: ArchConfig, seed: int = 0):
+    return T.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def dummy_batch(cfg: ArchConfig, batch: int, seq: int,
+                seed: int = 1) -> Dict[str, jax.Array]:
+    """Concrete random batch (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: Dict[str, jax.Array] = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab,
+                                     jnp.int32),
+    }
+    if cfg.encoder_layers:
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+    if cfg.vision_tokens:
+        out["patches"] = jax.random.normal(
+            k3, (batch, cfg.vision_tokens, cfg.d_model),
+            jnp.float32) * 0.02
+    return out
+
+
+def batch_spec(cfg: ArchConfig, batch: int,
+               seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.encoder_layers:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.vision_tokens:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    return out

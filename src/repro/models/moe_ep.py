@@ -1,0 +1,138 @@
+"""Expert-parallel MoE via ``shard_map`` + ``lax.ragged_dot``.
+
+The dense one-hot dispatch in :mod:`.layers` materializes ``(T, E, f)``
+activations — fine for smoke tests, impossible for 64–256-expert models
+(DeepSeek-V3 train_4k would need ~10^14 elements).  This module is the
+production path:
+
+* Activations enter **replicated over the 'model' axis** (standard TP).
+  Every model-rank computes the identical router decision, then handles
+  only the (token, choice) pairs routed to *its* expert shard — total
+  work across ranks is exactly ``T x top_k`` expert applications, no
+  duplication, and the only collective is the same ``psum`` a dense
+  TP MLP would issue.
+* Per rank: local choices are packed into a fixed ``capacity`` buffer
+  (scatter with drop semantics — standard capacity-factor token
+  dropping), **sorted by local expert id**, and run through
+  ``lax.ragged_dot`` segment matmuls (MXU-dense per expert, no padding
+  waste); results scatter back through the inverse permutation and
+  combine with router gates.
+* Fully differentiable (ragged_dot has a transpose rule; permutations
+  are gather/scatter).
+
+An alternative all-to-all dispatch with sequence-sharded activations is
+evaluated in EXPERIMENTS.md §Perf as a hillclimb candidate.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from .analysis_flags import FLAGS as _AFLAGS
+
+__all__ = ["moe_ep_apply_local", "EP_AXIS"]
+
+Params = Dict[str, Any]
+
+EP_AXIS = "model"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def moe_ep_apply_local(cfg: ArchConfig, p: Params, x: jax.Array,
+                       axis: str = EP_AXIS,
+                       data_axes: Tuple[str, ...] = ()
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Per-device body (call inside shard_map).
+
+    ``x`` (B_loc, S, d) is replicated over ``axis``; expert weights
+    ``p['wi'|'wg'|'wo']`` are sharded over ``axis`` on the expert dim
+    (shapes here are the *local* (E_loc, ...) shards).  Router weights
+    and the shared expert are replicated.
+    Returns (output contribution already psum'ed over ``axis``, aux loss).
+    """
+    m = cfg.moe
+    tp = lax.axis_size(axis)
+    rank = lax.axis_index(axis)
+    e_loc = p["wi"].shape[0]
+    b, s, d = x.shape
+    t = b * s
+    k = m.experts_per_tok
+    xf = x.reshape(t, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)         # (T, E)
+    if m.router_score == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(scores, k)                        # (T, k)
+    gates = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- pack this rank's (token, choice) hits into a capacity buffer ----
+    flat_e = idx.reshape(-1)                                # (T*k,)
+    flat_g = gates.reshape(-1).astype(x.dtype)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    mine = (flat_e // e_loc) == rank
+    eloc = flat_e % e_loc
+    cap = _round_up(max(int(m.capacity_factor * t * k / tp), 8), 8)
+    pos = jnp.cumsum(mine.astype(jnp.int32)) - 1            # slot per hit
+    slot = jnp.where(mine & (pos < cap), pos, cap)          # cap == drop
+    buf = jnp.zeros((cap, d), x.dtype).at[slot].set(
+        xf[tok], mode="drop")
+    buf_e = jnp.full((cap,), e_loc, jnp.int32).at[slot].set(
+        eloc, mode="drop")
+
+    # ---- sort by local expert, ragged segment matmuls --------------------
+    order = jnp.argsort(buf_e)                              # stable
+    xs = buf[order]
+    if _AFLAGS["balanced_moe"]:
+        # cost-probe path: XLA prices ragged_dot as dense over all E_loc
+        # groups; the balanced batched matmul prices the ideal-balance
+        # FLOPs exactly (see models/analysis_flags.py)
+        cpe = max(cap // e_loc, 1)
+        rows = cpe * e_loc
+        xs_p = (jnp.pad(xs, ((0, rows - cap), (0, 0)))
+                if rows > cap else xs[:rows])
+        xb = xs_p.reshape(e_loc, cpe, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["wg"])) \
+            * jnp.einsum("ecd,edf->ecf", xb, p["wi"])
+        y = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(-1, d)
+        y = (y[:cap] if rows > cap
+             else jnp.pad(y, ((0, cap - y.shape[0]), (0, 0))))
+    else:
+        gs = jnp.bincount(buf_e, length=e_loc + 1)[:e_loc] \
+            .astype(jnp.int32)
+        h = jax.nn.silu(lax.ragged_dot(xs, p["wg"], gs)) \
+            * lax.ragged_dot(xs, p["wi"], gs)
+        y = lax.ragged_dot(h, p["wo"], gs)                  # (cap, d)
+    y_unsorted = jnp.zeros_like(y).at[order].set(y)
+
+    # ---- combine: gate-weighted scatter-add back to tokens ---------------
+    contrib = jnp.where((slot < cap)[:, None],
+                        y_unsorted[jnp.minimum(slot, cap - 1)], 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[tok].add(
+        contrib * flat_g[:, None])
+    out = lax.psum(out, axis)
+
+    # shared expert(s): replicated compute, outside the psum
+    if "shared" in p:
+        out = out + L.mlp_apply(cfg, p["shared"], xf)
+
+    # aux load-balance loss: identical on model ranks (invarying there),
+    # averaged over the data axes where it genuinely varies
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], m.n_experts), axis=0)
+    pe = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    aux = m.n_experts * jnp.sum(me * pe)
+    if data_axes:
+        d_axes = tuple(data_axes)
+        aux = lax.psum(aux, d_axes) / lax.psum(jnp.ones(()), d_axes)
+    return out.reshape(b, s, d), aux

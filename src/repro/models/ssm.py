@@ -1,0 +1,194 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060): the sequence is
+split into chunks; within a chunk the quadratic dual form runs on the MXU
+(einsums over ``(Q, Q)`` decay-masked scores), and a ``lax.scan`` carries
+the ``(d_state, head_dim)`` recurrent state across chunks.  Single-token
+decode is the constant-memory recurrence — this is what makes
+``long_500k`` tractable for the SSM/hybrid architectures.
+
+Layer I/O matches an attention block (``(B, S, d_model) -> same``), so
+hybrid stacks interleave freely.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, rmsnorm
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode", "ssm_state_init"]
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, conv_dim
+
+
+def ssm_init(cfg: ArchConfig, key, dtype) -> Params:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim),
+                                     jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    s, d_in, nh, _ = _dims(cfg)
+    g = s.n_groups
+    z, x, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_in, 2 * d_in, 2 * d_in + g * s.d_state,
+         2 * d_in + 2 * g * s.d_state], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depth-wise causal conv1d: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                      # tiny static unroll (K=4)
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(cfg: ArchConfig, p: Params, u: jax.Array) -> jax.Array:
+    """Full-sequence SSD (training / prefill)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    bsz, S, _ = u.shape
+    Q = min(s.chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by SSD chunk {Q}"
+    nc = S // Q
+    g = s.n_groups
+    hp = s.head_dim
+
+    z, x, B, C, dt_raw = _split_proj(cfg, u @ p["in_proj"])
+    xbc = _causal_conv(jnp.concatenate([x, B, C], -1), p["conv_w"],
+                       p["conv_b"])
+    x, B, C = jnp.split(xbc, [d_in, d_in + g * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                # (nh,)
+    x = x.reshape(bsz, nc, Q, nh, hp)
+    B = B.reshape(bsz, nc, Q, g, s.d_state)
+    C = C.reshape(bsz, nc, Q, g, s.d_state)
+    dt = dt.reshape(bsz, nc, Q, nh)
+    hpg = nh // g                                           # heads per group
+    dA = dt * A                                             # (b,c,Q,nh)
+    cum = jnp.cumsum(dA, axis=2)                            # (b,c,Q,nh)
+
+    # ---- intra-chunk (dual quadratic form) --------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j; mask BEFORE exp so masked
+    # entries are exp(-inf) = 0 with zero gradient (no inf*0 NaNs)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,c,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    # scores[i,j] = (C_i . B_j) * L[i,j] * dt_j
+    CB = jnp.einsum("bcqgn,bcsgn->bcqsg", C, B)             # (b,c,Q,Q,g)
+    CB = jnp.repeat(CB, hpg, axis=-1)                       # (b,c,Q,Q,nh)
+    W = CB * L * dt[:, :, None, :, :]
+    y_diag = jnp.einsum("bcqsh,bcshp->bcqhp",
+                        W.astype(u.dtype), x)
+
+    # ---- chunk summary states ---------------------------------------------
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (b,c,Q,nh)
+    Bh = jnp.repeat(B, hpg, axis=-2).reshape(bsz, nc, Q, nh, s.d_state)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                        (decay_end * dt).astype(u.dtype), Bh, x)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (b,c,nh)
+
+    def step(h, inp):
+        dec, st = inp                                       # (b,nh), (b,nh,n,p)
+        h_new = h * dec[..., None, None].astype(h.dtype) + st
+        return h_new, h                                     # emit h_{c-1}
+
+    h0 = jnp.zeros((bsz, nh, s.d_state, hp), u.dtype)
+    _, h_prev = lax.scan(step, h0,
+                         (chunk_decay.transpose(1, 0, 2),
+                          states.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # (b,c,nh,n,p)
+
+    Ch = jnp.repeat(C, hpg, axis=-2).reshape(bsz, nc, Q, nh, s.d_state)
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, h_prev,
+                       jnp.exp(cum).astype(u.dtype))
+
+    y = (y_diag + y_off
+         + x * p["D"][..., None].astype(u.dtype))
+    y = y.reshape(bsz, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def ssm_state_init(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(cfg: ArchConfig, p: Params, u: jax.Array,
+               state: Params) -> Tuple[jax.Array, Params]:
+    """One-token recurrence: u (B, 1, d)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    bsz = u.shape[0]
+    g, hp = s.n_groups, s.head_dim
+    hpg = nh // g
+
+    z, x, B, C, dt_raw = _split_proj(cfg, u @ p["in_proj"])
+    xbc = jnp.concatenate([x, B, C], -1)                    # (B,1,conv)
+    window = jnp.concatenate([state["conv"],
+                              xbc.astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(u.dtype),
+                          p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    x, B, C = jnp.split(xbc1, [d_in, d_in + g * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                    # (B,nh)
+    x = x.reshape(bsz, nh, hp)
+    Bh = jnp.repeat(B.reshape(bsz, g, s.d_state), hpg, axis=1)
+    Ch = jnp.repeat(C.reshape(bsz, g, s.d_state), hpg, axis=1)
+    h = state["h"].astype(jnp.float32)
+    h = h * dA[..., None, None] \
+        + (dt[..., None, None] * Bh[..., :, None]
+           * x[..., None, :].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+    y = y + p["D"][..., None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_in).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    new_state = {"h": h.astype(state["h"].dtype),
+                 "conv": window[:, 1:].astype(state["conv"].dtype)}
+    return out, new_state

@@ -1,0 +1,15 @@
+"""Sharded-friendly functional optimizer (AdamW) + schedules.
+
+Plain pytree-in/pytree-out so it composes with ``jax.jit`` shardings:
+optimizer state mirrors the parameter tree (ZeRO-style sharding of the
+state falls out of giving it the same PartitionSpecs as the params, or
+data-axis specs for fully sharded states).  ``moment_dtype`` lets huge
+models keep moments in bf16 (recorded in DESIGN.md — the 671B config
+cannot hold fp32 moments on a 256-chip pod).
+"""
+
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import cosine_warmup
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "cosine_warmup"]

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup"]
+
+
+def cosine_warmup(step, *, peak: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    """Linear warmup to ``peak`` then cosine decay to ``floor * peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor * peak + (1 - floor) * peak * 0.5 \
+        * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,13 @@
+"""INT8 quantization utilities (paper §IV-A: weights/activations INT8).
+
+Bridges the JAX models to the CIM arithmetic model: symmetric per-tensor
+or per-channel weight quantization, activation calibration, and a
+drop-in quantized linear (backed by the bit-serial Pallas kernel or the
+direct INT8 MXU path) for QAT / INT8 serving.
+"""
+
+from .quantize import (QTensor, dequantize, fake_quant, quantize_tensor,
+                       quantize_tree)
+
+__all__ = ["QTensor", "quantize_tensor", "quantize_tree", "dequantize",
+           "fake_quant"]

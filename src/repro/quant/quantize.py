@@ -1,0 +1,60 @@
+"""Symmetric INT8 quantization."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QTensor", "quantize_tensor", "dequantize", "quantize_tree",
+           "fake_quant"]
+
+
+@dataclass
+class QTensor:
+    q: jax.Array            # int8
+    scale: jax.Array        # () or (channels,)
+    axis: Optional[int]     # channel axis, None = per-tensor
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def quantize_tensor(x: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Symmetric int8: scale = max|x| / 127 (per tensor or per channel)."""
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=jnp.squeeze(scale) if axis is None
+                   else scale, axis=axis)
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    s = t.scale
+    if t.axis is not None and s.ndim != t.q.ndim:
+        shape = [1] * t.q.ndim
+        shape[t.axis] = -1
+        s = s.reshape(shape)
+    return t.q.astype(jnp.float32) * s
+
+
+def fake_quant(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Straight-through quantize-dequantize (QAT forward)."""
+    y = dequantize(quantize_tensor(x, axis))
+    return x + jax.lax.stop_gradient(y - x)
+
+
+def quantize_tree(params: Any, axis: Optional[int] = None):
+    """Quantize every float leaf of a pytree; ints pass through."""
+    def q(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2:
+            return quantize_tensor(x, axis)
+        return x
+    return jax.tree.map(q, params)

@@ -1,0 +1,92 @@
+"""Graph IR + workload builders: geometry, condensation invariants."""
+
+import math
+
+import pytest
+
+from repro.core import workloads
+from repro.core.graph import CondensedGraph, Graph, GraphError, Op
+
+# Published parameter / MAC counts (224x224, 1000 classes).
+KNOWN = {
+    # name: (params M, MACs G) with tolerance
+    "resnet18": (11.69, 1.82),
+    "vgg19": (143.7, 19.6),
+    "mobilenetv2": (3.5, 0.30),
+    "efficientnetb0": (5.3, 0.39),
+}
+
+
+@pytest.mark.parametrize("name", sorted(KNOWN))
+def test_workload_matches_published_stats(name):
+    g = workloads.build(name)
+    params_m, macs_g = KNOWN[name]
+    # weights are INT8 -> bytes == param count
+    assert g.total_weight_bytes / 1e6 == pytest.approx(params_m, rel=0.03)
+    assert g.total_macs / 1e9 == pytest.approx(macs_g, rel=0.05)
+
+
+@pytest.mark.parametrize("name", sorted(KNOWN) + ["transformer", "tiny_cnn"])
+def test_condensation_preserves_totals(name):
+    g = workloads.build(name)
+    cg = g.condense()
+    assert cg.total_weight_bytes == g.total_weight_bytes
+    assert cg.total_macs == g.total_macs
+    # every MVM op anchors exactly one group
+    n_mvm = sum(1 for o in g.ops if o.is_mvm)
+    n_anchored = sum(1 for grp in cg if grp.is_mvm)
+    assert n_anchored == n_mvm
+    # groups partition all non-input ops
+    covered = sorted(i for grp in cg for i in grp.op_ids)
+    non_input = sorted(o.idx for o in g.ops if o.kind != "input")
+    assert covered == non_input
+
+
+@pytest.mark.parametrize("name", sorted(KNOWN))
+def test_condensed_graph_topological(name):
+    cg = workloads.build(name).condense()
+    for grp in cg:
+        assert all(p < grp.idx for p in grp.preds)
+    masks = cg.ancestor_masks()
+    # ancestors are transitively closed
+    for grp in cg:
+        for p in grp.preds:
+            assert masks[grp.idx] & masks[p] == masks[p]
+
+
+def test_conv_geometry():
+    g = Graph("t")
+    x = g.input("x", (8, 8, 3))
+    y = g.conv("c", x, cout=16, k=3, stride=2, use_bn=False)
+    op = g.ops[y]
+    assert op.out_shape == (4, 4, 16)
+    assert (op.gemm_m, op.gemm_k, op.gemm_n) == (16, 27, 16)
+    assert op.weight_bytes == 27 * 16
+    assert op.macs == 16 * 27 * 16
+
+
+def test_depthwise_geometry():
+    g = Graph("t")
+    x = g.input("x", (8, 8, 32))
+    y = g.conv("dw", x, cout=32, k=3, groups=32, use_bn=False)
+    op = g.ops[y]
+    assert op.kind == "dwconv"
+    assert (op.gemm_k, op.gemm_n, op.groups) == (9, 1, 32)
+    assert op.weight_bytes == 9 * 32
+    assert op.macs == 64 * 9 * 32
+
+
+def test_dangling_input_rejected():
+    g = Graph("t")
+    with pytest.raises(GraphError):
+        g.add(Op(name="bad", kind="relu", inputs=(5,), out_shape=(1,)))
+
+
+def test_se_block_fuses_into_groups():
+    """EfficientNet SE: pool->fc->fc->scale must condense without creating
+    anchor-less groups, and the condensed graph stays near-linear."""
+    cg = workloads.build("efficientnetb0").condense()
+    anchorless = [grp for grp in cg if not grp.is_mvm]
+    assert len(anchorless) == 0
+    # skip connections keep preds <= 2
+    assert max(len(grp.preds) for grp in cg) <= 2

@@ -1,0 +1,96 @@
+"""ISA conformance: encode/decode round-trip, extensibility, error checks."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isa import (FORMATS, Instr, InstrDescriptor, Isa, IsaError,
+                            Program, default_isa)
+
+ISA = default_isa()
+
+
+def _operand_bounds(desc):
+    """(semantic name -> (lo, hi)) for each operand of a descriptor."""
+    widths = dict(FORMATS[desc.fmt])
+    out = {}
+    for sem, enc in desc.operands.items():
+        w = widths[enc]
+        if enc.startswith("imm"):
+            out[sem] = (-(1 << (w - 1)), (1 << (w - 1)) - 1)
+        else:
+            out[sem] = (0, (1 << w) - 1)
+    return out
+
+
+@given(st.data())
+@settings(max_examples=200, deadline=None)
+def test_encode_decode_roundtrip(data):
+    desc = data.draw(st.sampled_from(ISA.descriptors))
+    args = {}
+    for sem, (lo, hi) in _operand_bounds(desc).items():
+        args[sem] = data.draw(st.integers(lo, hi))
+    ins = ISA.instr(desc.name, **args)
+    word = ISA.encode(ins)
+    assert 0 <= word < (1 << 32)
+    back = ISA.decode(word)
+    assert back.op == desc.name
+    assert back.args == args
+
+
+def test_all_descriptors_unique_and_valid():
+    names = [d.name for d in ISA.descriptors]
+    assert len(names) == len(set(names))
+    # at least the paper's three instruction categories are populated
+    units = {d.unit for d in ISA.descriptors}
+    assert {"cim", "vector", "scalar", "noc", "control"} <= units
+
+
+def test_field_overflow_rejected():
+    with pytest.raises(IsaError):
+        ISA.encode(ISA.instr("S_ADDI", dst=1, a=2, imm=1 << 20))
+    with pytest.raises(IsaError):
+        ISA.encode(ISA.instr("CIM_MVM", dst=40, src=0, rep=0))
+
+
+def test_unknown_operand_rejected():
+    with pytest.raises(IsaError):
+        ISA.instr("NOP", bogus=1)
+
+
+def test_extensibility_template():
+    """New op integrates via a descriptor alone (paper §III-B)."""
+    isa = default_isa()
+    d = InstrDescriptor(name="V_SORT", opcode=63, fmt="R", unit="vector",
+                        operands={"dst": "rd", "a": "rs1"},
+                        latency_class="vec_special",
+                        energy_class="vector_alu")
+    isa.register(d)
+    ins = isa.instr("V_SORT", dst=3, a=4)
+    assert isa.decode(isa.encode(ins)).args == {"dst": 3, "a": 4}
+    # duplicate name / opcode+funct collision rejected
+    with pytest.raises(IsaError):
+        isa.register(d)
+
+
+def test_opcode_format_collision_rejected():
+    isa = default_isa()
+    with pytest.raises(IsaError):
+        # opcode 0 is CIM_MVM with fmt C; can't rebind to fmt R
+        isa.register(InstrDescriptor(name="X", opcode=0, fmt="R",
+                                     unit="cim"))
+
+
+def test_program_encode_and_disassemble():
+    p = Program()
+    p.append(ISA.instr("CIM_CFG", sreg=3, imm=8))
+    p.append(ISA.instr("CIM_MVM", dst=1, src=2, rep=4))
+    p.append(ISA.instr("HALT"))
+    words = p.encode(ISA)
+    assert words.dtype.name == "uint32" and len(words) == 3
+    text = p.disassemble(ISA)
+    assert "CIM_MVM" in text and "HALT" in text
+
+
+def test_signed_immediates_roundtrip():
+    ins = ISA.instr("S_ADDI", dst=1, a=0, imm=-42)
+    assert ISA.decode(ISA.encode(ins)).args["imm"] == -42

@@ -1,0 +1,141 @@
+"""Pallas CIM kernel vs pure-jnp oracle: shape/dtype sweep + properties.
+
+Digital CIM arithmetic is exact, so every comparison is integer equality,
+not allclose-with-tolerance.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.bitserial_mvm import bitserial_mvm_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(m, k, n, lo=-128, hi=128):
+    x = RNG.integers(lo, hi, (m, k)).astype(np.int8)
+    w = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# Decomposition math
+# ---------------------------------------------------------------------------
+
+
+def test_bitplane_reference_equals_matmul():
+    x, w = _rand(64, 96, 32)
+    assert np.array_equal(kref.bitserial_mvm_ref(x, w), kref.mvm_ref(x, w))
+
+
+def test_unsigned_bitplanes():
+    x = jnp.asarray(RNG.integers(0, 128, (32, 64)).astype(np.int8))
+    w = jnp.asarray(RNG.integers(-128, 128, (64, 16)).astype(np.int8))
+    # 7 planes suffice for non-negative activations
+    out = kref.bitserial_mvm_ref(x, w, act_bits=7, signed=False)
+    assert np.array_equal(out, kref.mvm_ref(x, w))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+ALIGNED = [(128, 128, 128), (256, 128, 384), (128, 512, 128)]
+
+
+@pytest.mark.parametrize("m,k,n", ALIGNED)
+def test_pallas_kernel_aligned(m, k, n):
+    x, w = _rand(m, k, n)
+    out = bitserial_mvm_pallas(x, w, interpret=True)
+    assert out.dtype == jnp.int32
+    assert np.array_equal(out, kref.mvm_ref(x, w))
+
+
+RAGGED = [(1, 1, 1), (37, 100, 59), (128, 129, 130), (200, 64, 1000),
+          (5, 4096, 8), (511, 27, 64)]
+
+
+@pytest.mark.parametrize("m,k,n", RAGGED)
+def test_cim_mvm_ragged(m, k, n):
+    x, w = _rand(m, k, n)
+    out = ops.cim_mvm(x, w, interpret=True)
+    assert out.shape == (m, n)
+    assert np.array_equal(out, kref.mvm_ref(x, w))
+
+
+@pytest.mark.parametrize("act_bits", [4, 6, 8])
+def test_cim_mvm_reduced_precision(act_bits):
+    """act_bits < 8 is exact when activations fit act_bits bits."""
+    lo, hi = -(1 << (act_bits - 1)), 1 << (act_bits - 1)
+    x = jnp.asarray(RNG.integers(lo, hi, (64, 128)).astype(np.int8))
+    w = jnp.asarray(RNG.integers(-128, 128, (128, 64)).astype(np.int8))
+    out = ops.cim_mvm(x, w, act_bits=act_bits, interpret=True)
+    # sign bit position differs: mask to act_bits two's complement first
+    xm = ((x.astype(jnp.int32) + hi) % (2 * hi)) - hi
+    want = kref.mvm_ref(xm.astype(jnp.int8), w)
+    assert np.array_equal(out, want)
+
+
+def test_blocks_affect_nothing():
+    x, w = _rand(160, 192, 96)
+    a = ops.cim_mvm(x, w, block_m=128, block_n=128, block_k=128,
+                    interpret=True)
+    b = ops.cim_mvm(x, w, block_m=32, block_n=64, block_k=96,
+                    interpret=True)
+    assert np.array_equal(a, b)
+
+
+def test_int8_matmul_identical_to_kernel():
+    x, w = _rand(96, 160, 72)
+    assert np.array_equal(ops.int8_matmul(x, w),
+                          ops.cim_mvm(x, w, interpret=True))
+
+
+@given(st.integers(1, 64), st.integers(1, 96), st.integers(1, 64),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_cim_mvm_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)).astype(np.int8))
+    out = ops.cim_mvm(x, w, block_m=32, block_n=32, block_k=32,
+                      interpret=True)
+    assert np.array_equal(out, kref.mvm_ref(x, w))
+
+
+# ---------------------------------------------------------------------------
+# Requant + fake-quant linear
+# ---------------------------------------------------------------------------
+
+
+def test_requant_matches_iss_semantics():
+    """kernels.ref.requant_ref == the compiled V_QUANT semantics."""
+    from repro.core.codegen import QuantParams
+    from repro.core.ref import quantize as iss_quant
+    acc = RNG.integers(-100000, 100000, (64,)).astype(np.int32)
+    for scale, shift, div in [(1, 8, 1), (3, 12, 1), (1, 4, 49)]:
+        got = kref.requant_ref(jnp.asarray(acc), scale, shift, div)
+        want = iss_quant(acc, QuantParams(scale=scale, shift=shift),
+                         div=div)
+        assert np.array_equal(np.asarray(got), want)
+
+
+def test_quantized_linear_forward_and_grad():
+    x = jnp.asarray(RNG.normal(0, 1, (8, 32)).astype(np.float32))
+    w = jnp.asarray(RNG.integers(-128, 128, (32, 16)).astype(np.int8))
+    scales = (jnp.float32(0.02), jnp.float32(0.01))
+    y = ops.quantized_linear(x, w, scales)
+    want = kref.quantized_linear_ref(x, w, 0.01, 0.02)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+    # straight-through gradient exists and is finite
+    g = jax.grad(lambda xx: ops.quantized_linear(xx, w, scales).sum())(x)
+    assert np.isfinite(np.asarray(g)).all()
+    # and matches the dequantized-weight linear gradient
+    w_deq = w.astype(jnp.float32) * 0.01
+    g_ref = jax.grad(lambda xx: (xx @ w_deq).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5)

@@ -1,0 +1,177 @@
+"""Launch layer: sharding spec trees, HLO analysis, planner."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, STANDARD_SHAPES
+from repro.core.planner import PodSpec, plan_parallelism
+from repro.launch import analysis, sharding, steps
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # logical 16x16 mesh built from 1 real device? jax.make_mesh needs
+    # real devices; use a (1,1) mesh for structure tests and a fake-shape
+    # helper for divisibility logic.
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class _FakeMesh:
+    """Just enough of a Mesh for the pure-divisibility helpers."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        out = 1
+        for v in self.shape.values():
+            out *= v
+        return out
+
+
+PROD = _FakeMesh({"data": 16, "model": 16})
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_match_param_tree(name, mesh):
+    """Spec tree structure must match the parameter tree exactly, with
+    every sharded dim divisible on the PRODUCTION mesh."""
+    cfg = ARCHS[name]
+    params = steps.abstract_params(cfg)
+    specs = sharding.param_specs(cfg, PROD)
+    # tree.map raises on structure mismatch
+    merged = jax.tree.map(lambda s, p: (tuple(s), p.shape), specs, params,
+                          is_leaf=lambda x: isinstance(x, P))
+    # every sharded dim must divide the corresponding param dim on the
+    # production mesh
+    def check(pair):
+        spec, shape = pair
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = PROD.shape["model"]
+            assert shape[dim] % size == 0, (name, spec, shape)
+    jax.tree.map(check, merged,
+                 is_leaf=lambda x: isinstance(x, tuple)
+                 and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def test_head_sharding_choices():
+    hs = lambda n: sharding.head_sharding_choice(ARCHS[n], PROD)
+    assert hs("phi3-medium-14b") == "head_dim"       # 40 heads, kv 10
+    assert hs("deepseek-coder-33b") == "head_dim"    # 56 heads, kv 8
+    assert hs("deepseek-v3-671b") == "heads"         # 128 MLA heads
+    assert hs("olmoe-1b-7b") == "heads"              # 16 heads, kv 16
+    assert hs("whisper-small") == "head_dim"         # 12 heads
+
+
+def test_usable_data_axes_drops_for_small_batch():
+    assert sharding.usable_data_axes(PROD, 256) == ("data",)
+    assert sharding.usable_data_axes(PROD, 1) == ()
+    three = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert sharding.usable_data_axes(three, 256) == ("pod", "data")
+    assert sharding.usable_data_axes(three, 16) == ("data",)
+    assert sharding.usable_data_axes(three, 1) == ()
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %all-reduce.1 = bf16[16,4096,448]{2,1,0} all-reduce(%x), replica_groups=...
+  %ag = f32[1024,512]{1,0} all-gather(%y), dimensions={0}
+  %rs = bf16[64,128]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp-start = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute-start(%w)
+  %dot.5 = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_bytes_parsing():
+    coll = analysis.collective_bytes(HLO_SAMPLE)
+    assert coll["all-reduce"] == 16 * 4096 * 448 * 2
+    assert coll["all-gather"] == 1024 * 512 * 4
+    assert coll["reduce-scatter"] == 64 * 128 * 2
+    assert coll["collective-permute"] == 2 * 8 * 8 * 4
+    assert coll["all-to-all"] == 0
+    assert coll["count"] == 4
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    coll = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+            "all-to-all": 0, "collective-permute": 0}
+    t = analysis.roofline_terms(cost, coll)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.dominant == "compute"
+    t2 = analysis.roofline_terms(cost, coll, extra_link_bytes=200e9)
+    assert t2.dominant == "collective"
+
+
+def test_model_flops_train_vs_decode():
+    cfg = ARCHS["phi3-medium-14b"]
+    tr = analysis.model_flops(cfg, STANDARD_SHAPES["train_4k"], 256)
+    de = analysis.model_flops(cfg, STANDARD_SHAPES["decode_32k"], 256)
+    n = cfg.param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096 / 256)
+    assert de == pytest.approx(2 * n * 128 / 256)
+
+
+def test_moe_active_params_subtracts_inactive_experts():
+    cfg = ARCHS["olmoe-1b-7b"]
+    active = analysis._active_params(cfg)
+    assert active < 0.35 * cfg.param_count()      # 8 of 64 experts
+
+
+# ---------------------------------------------------------------------------
+# Planner (Alg. 1 at pod scale)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_planner_produces_valid_plan(name):
+    cfg = ARCHS[name]
+    plan = plan_parallelism(cfg, STANDARD_SHAPES["train_4k"])
+    assert plan.stages, name
+    # stages tile the block range exactly
+    covered = []
+    for s in plan.stages:
+        covered.extend(range(*s.blocks))
+    assert covered == list(range(cfg.n_blocks))
+    # each stage's replica fits the HBM budget
+    pod = plan.pod
+    for s in plan.stages:
+        assert s.bytes_per_chip <= pod.hbm_bytes * pod.hbm_budget_frac \
+            * 1.001
+        assert s.chips <= pod.n_chips
+    assert plan.est_step_s > 0 and plan.tokens_per_s > 0
+
+
+def test_planner_big_models_need_more_stages():
+    small = plan_parallelism(ARCHS["mamba2-780m"],
+                             STANDARD_SHAPES["train_4k"])
+    big = plan_parallelism(ARCHS["deepseek-v3-671b"],
+                           STANDARD_SHAPES["train_4k"])
+    assert big.pp > small.pp
+    # capacity forces the 671B model to multiple stages (paper's wall)
+    assert big.pp >= 4
+
+
+def test_planner_duplication_on_small_models():
+    """Small models replicate stages — the paper's weight-duplication
+    lever at pod scale."""
+    plan = plan_parallelism(ARCHS["mamba2-780m"],
+                            STANDARD_SHAPES["train_4k"])
+    assert plan.stages[0].dup >= 32

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned architecture instantiates a REDUCED config of the same
+family and runs, on CPU:
+
+* one forward pass (shape + finiteness),
+* one loss/grad evaluation (trainability),
+* step-by-step decode vs full forward (KV-cache / ring-SWA / MLA-latent /
+  SSD-state consistency) — the decode paths must agree with the parallel
+  formulation to ~fp32 tolerance.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import model_zoo, transformer as T
+
+BATCH, SEQ = 2, 32
+
+NO_DECODE_CONSISTENCY = {
+    # vision prefix shifts decode positions; exercised via forward only
+    "llava-next-mistral-7b",
+}
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name, full in ARCHS.items():
+        cfg = reduced(full)
+        params = model_zoo.init(cfg)
+        batch = model_zoo.dummy_batch(cfg, BATCH, SEQ)
+        out[name] = (cfg, params, batch)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finite(built, name):
+    cfg, params, batch = built[name]
+    logits = T.forward(cfg, params, batch, remat=False)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_loss_and_grad_finite(built, name):
+    cfg, params, batch = built[name]
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(np.isfinite(np.asarray(g)).all()
+                          for g in leaves)
+
+
+@pytest.mark.parametrize("name", sorted(set(ARCHS)
+                                        - NO_DECODE_CONSISTENCY))
+def test_decode_matches_forward(built, name):
+    """Token-by-token decode reproduces the parallel forward pass."""
+    cfg, params, batch = built[name]
+    logits_full = np.asarray(
+        T.forward(cfg, params, batch, remat=False)[:, -1], np.float32)
+    enc = None
+    if cfg.encoder_layers:
+        enc = T._run_encoder(cfg, params, batch["frames"])
+    state = T.init_decode_state(cfg, params, BATCH, SEQ, enc=enc)
+    step = jax.jit(lambda st, tok: T.decode_step(cfg, params, st, tok))
+    logits = None
+    for t in range(SEQ):
+        logits, state = step(state, batch["tokens"][:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(logits), logits_full,
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_sliding_window_ring_cache_smaller_than_seq():
+    """SWA cache holds only `window` slots yet matches full forward."""
+    cfg = reduced(ARCHS["h2o-danube-3-4b"])
+    assert cfg.sliding_window == 16 and SEQ > cfg.sliding_window
+    params = model_zoo.init(cfg)
+    batch = model_zoo.dummy_batch(cfg, BATCH, SEQ)
+    assert T.cache_len_for(cfg, SEQ) == 16
+    # covered by test_decode_matches_forward; here assert cache geometry
+    state = T.init_decode_state(cfg, params, BATCH, SEQ)
+    assert state["caches"]["attn0"]["k"].shape[2] == 16
+
+
+def test_flash_attention_matches_naive():
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(0)
+    b, s, kv, g, d = 2, 256, 2, 2, 16
+    q = jax.random.normal(key, (b, s, kv, g, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+
+    def causal(qi, ki):
+        return ki <= qi
+
+    naive = L._gqa_scores_ctx(q, k, v, causal, 0)
+    flash = L.flash_attention(q, k, v, causal, block_q=64, block_k=32)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_sliding_window():
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(3)
+    b, s, kv, g, d = 1, 192, 1, 2, 8
+    q = jax.random.normal(key, (b, s, kv, g, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+    win = 37
+
+    def mfn(qi, ki):
+        return (ki <= qi) & (ki > qi - win)
+
+    naive = L._gqa_scores_ctx(q, k, v, mfn, 0)
+    flash = L.flash_attention(q, k, v, mfn, block_q=48, block_k=64)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """Chunked SSD == step-by-step recurrence on a tiny config."""
+    from repro.models import ssm as S
+    cfg = reduced(ARCHS["mamba2-780m"])
+    params = model_zoo.init(cfg)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    p = bp["ssm0"]
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 32, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_chunked = S.ssm_apply(cfg, p, x)
+    state = S.ssm_state_init(cfg, 2, jnp.float32)
+    ys = []
+    for t in range(32):
+        y, state = S.ssm_decode(cfg, p, x[:, t:t + 1], state)
+        ys.append(y)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunked),
+                               np.asarray(y_steps), rtol=2e-3, atol=2e-4)

@@ -1,0 +1,184 @@
+"""Alg. 1 DP partitioning: closure enumeration, DP optimality (vs an
+independent brute force), strategy dominance, capacity handling."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads
+from repro.core.arch import default_chip
+from repro.core.graph import CondensedGraph, Group
+from repro.core.mapping import CostParams, mg_tiles, optimal_mapping
+from repro.core.partition import (dependency_closures, dp_partition,
+                                  greedy_partition, partition, prefix_closures)
+
+CHIP = default_chip()
+SMALL_CHIP = default_chip(n_cores=4, mesh_cols=2, n_macro_groups=2,
+                          macros_per_group=2)
+
+
+# ---------------------------------------------------------------------------
+# Closure enumeration
+# ---------------------------------------------------------------------------
+
+
+def _chain(n: int) -> CondensedGraph:
+    groups = [Group(idx=i, name=f"g{i}", op_ids=(i,), anchor=i,
+                    preds=(i - 1,) if i else (), gemm_m=4, gemm_k=64,
+                    gemm_n=64, weight_bytes=64 * 64, macs=4 * 64 * 64,
+                    in_bytes=256, out_bytes=256)
+              for i in range(n)]
+    return CondensedGraph("chain", groups)
+
+
+def test_chain_closures_are_prefixes():
+    cg = _chain(6)
+    assert dependency_closures(cg) == prefix_closures(cg)
+
+
+def test_antichain_closures_are_all_subsets():
+    groups = [Group(idx=i, name=f"g{i}", op_ids=(i,), anchor=i, preds=(),
+                    gemm_m=1, gemm_k=8, gemm_n=8, weight_bytes=64, macs=64,
+                    in_bytes=8, out_bytes=8) for i in range(4)]
+    cg = CondensedGraph("anti", groups)
+    assert sorted(dependency_closures(cg)) == sorted(range(16))
+
+
+def _random_cg(draw) -> CondensedGraph:
+    n = draw(st.integers(1, 6))
+    groups = []
+    for i in range(n):
+        preds = tuple(sorted(draw(st.sets(st.integers(0, i - 1), max_size=2))
+                             )) if i else ()
+        k = draw(st.sampled_from([64, 256, 512, 2048]))
+        cout = draw(st.sampled_from([8, 64, 256]))
+        m = draw(st.sampled_from([1, 16, 196]))
+        groups.append(Group(
+            idx=i, name=f"g{i}", op_ids=(i,), anchor=i, preds=preds,
+            gemm_m=m, gemm_k=k, gemm_n=cout, weight_bytes=k * cout,
+            macs=m * k * cout, vector_work={"alu": m * cout},
+            in_bytes=m * k, out_bytes=m * cout))
+    return CondensedGraph("rand", groups)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_closures_are_downward_closed(data):
+    cg = _random_cg(data.draw)
+    masks = dependency_closures(cg)
+    assert 0 in masks and (1 << len(cg)) - 1 in masks
+    assert len(set(masks)) == len(masks)
+    for m in masks:
+        for g in cg:
+            if m & (1 << g.idx):
+                for p in g.preds:
+                    assert m & (1 << p), "closure not predecessor-closed"
+
+
+# ---------------------------------------------------------------------------
+# DP optimality vs independent brute force
+# ---------------------------------------------------------------------------
+
+
+def _brute_force_cost(cg: CondensedGraph, chip, params) -> float:
+    """Enumerate ALL valid stage sequences directly (no closure lattice)."""
+    n = len(cg)
+    full = (1 << n) - 1
+    pred_mask = [0] * n
+    for g in cg:
+        for p in g.preds:
+            pred_mask[g.idx] |= 1 << p
+
+    from functools import lru_cache
+
+    @lru_cache(maxsize=None)
+    def best(done: int) -> float:
+        if done == full:
+            return 0.0
+        avail = [v for v in range(n) if not done & (1 << v)]
+        best_c = math.inf
+        # all non-empty subsets of remaining nodes
+        m = len(avail)
+        for pick in range(1, 1 << m):
+            stage = sum(1 << avail[b] for b in range(m) if pick & (1 << b))
+            # executable: every member's preds inside done|stage
+            ok = all((pred_mask[v] & ~(done | stage)) == 0
+                     for v in range(n) if stage & (1 << v))
+            if not ok:
+                continue
+            gids = [v for v in range(n) if stage & (1 << v)]
+            plan = optimal_mapping(cg, gids, chip, params)
+            if plan is None:
+                continue
+            c = plan.latency_cycles() + best(done | stage)
+            best_c = min(best_c, c)
+        return best_c
+
+    return best(0)
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_dp_matches_brute_force(data):
+    cg = _random_cg(data.draw)
+    params = CostParams(batch=4)
+    res = dp_partition(cg, SMALL_CHIP, params)
+    brute = _brute_force_cost(cg, SMALL_CHIP, params)
+    assert res.latency_cycles() == pytest.approx(brute, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Strategy behaviour on the paper's workloads (small resolution for speed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["resnet18", "mobilenetv2"])
+def test_dp_dominates_baselines(name):
+    cg = workloads.build(name, res=64).condense()
+    params = CostParams(batch=16)
+    lat = {s: partition(cg, CHIP, s, params).latency_cycles()
+           for s in ("generic", "cim-mlc", "dp")}
+    assert lat["dp"] <= lat["cim-mlc"] * (1 + 1e-9)
+    assert lat["dp"] <= lat["generic"] * (1 + 1e-9)
+
+
+def test_oversized_group_streams_in_rounds():
+    """VGG19 fc1 (~103 MB) exceeds chip capacity -> rounds > 1, own stage."""
+    cg = workloads.build("vgg19").condense()
+    fc1 = next(g for g in cg if "fc1" in g.name)
+    assert mg_tiles(fc1, CHIP) > CHIP.n_cores * CHIP.core.cim.n_macro_groups
+    res = partition(cg, CHIP, "dp")
+    stage = next(s for s in res.stages if fc1.idx in s.gids)
+    assert stage.gids == (fc1.idx,)
+    alloc = stage.allocs[0]
+    assert alloc.rounds > 1
+
+
+def test_partition_covers_all_groups_once():
+    cg = workloads.build("efficientnetb0", res=64).condense()
+    for strat in ("generic", "cim-mlc", "dp"):
+        res = partition(cg, CHIP, strat)
+        covered = sorted(i for s in res.stages for i in s.gids)
+        assert covered == list(range(len(cg)))
+
+
+def test_stage_dependencies_respected():
+    cg = workloads.build("resnet18", res=64).condense()
+    res = partition(cg, CHIP, "dp")
+    done = set()
+    for s in res.stages:
+        for gid in s.gids:
+            assert all(p in done or p in s.gids for p in cg[gid].preds)
+        done |= set(s.gids)
+
+
+def test_energy_events_positive():
+    cg = workloads.build("mobilenetv2", res=64).condense()
+    res = partition(cg, CHIP, "dp")
+    ev = res.energy_events()
+    assert ev["cim_macro_passes"] > 0
+    assert ev["static_core_cycles"] > 0
+    from repro.core.energy import energy_breakdown
+    bd = energy_breakdown(ev)
+    assert bd["total"] > 0

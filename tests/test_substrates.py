@@ -1,0 +1,234 @@
+"""Substrate subsystems: optimizer, data pipeline, quantization,
+checkpointing, fault tolerance, elastic re-meshing, stragglers."""
+
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.configs import ARCHS, reduced
+from repro.data import SyntheticStream, make_batch
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_warmup, global_norm)
+from repro.quant import dequantize, fake_quant, quantize_tensor
+from repro.runtime import (FailureDetector, HeartbeatRegistry,
+                           StragglerDetector, plan_remesh)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    cfg = AdamWConfig(weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw_update(g, state, params,
+                                        jnp.float32(0.05), cfg)
+    assert float(loss(params)) < 1e-2 * l0
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_adamw_clip_and_bf16_moments():
+    params = {"w": jnp.ones((4,))}
+    cfg = AdamWConfig(clip_norm=0.5, moment_dtype="bfloat16")
+    state = adamw_init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.full((4,), 100.0)}
+    _, state, m = adamw_update(g, state, params, jnp.float32(0.1), cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_warmup_shape():
+    lr0 = float(cosine_warmup(0, peak=1e-3, warmup=10, total=100))
+    lrw = float(cosine_warmup(10, peak=1e-3, warmup=10, total=100))
+    lre = float(cosine_warmup(100, peak=1e-3, warmup=10, total=100))
+    assert lr0 == 0.0 and lrw == pytest.approx(1e-3)
+    assert lre == pytest.approx(1e-4, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_batches_deterministic_per_step():
+    cfg = reduced(ARCHS["phi3-medium-14b"])
+    a = make_batch(cfg, 8, 16, seed=3, step=7)
+    b = make_batch(cfg, 8, 16, seed=3, step=7)
+    c = make_batch(cfg, 8, 16, seed=3, step=8)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].min() >= 1 and a["tokens"].max() < cfg.vocab
+
+
+def test_stream_resume_reproduces_sequence():
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    s1 = SyntheticStream(cfg, 4, 8, seed=5)
+    first = [next(s1)["tokens"] for _ in range(3)]
+    state = s1.state_dict()
+    nxt = next(s1)["tokens"]
+    s1.close()
+    s2 = SyntheticStream.restore(cfg, 4, 8, state)
+    assert np.array_equal(next(s2)["tokens"], nxt)
+    s2.close()
+
+
+def test_modality_extras_present():
+    wcfg = reduced(ARCHS["whisper-small"])
+    b = make_batch(wcfg, 2, 8, seed=0, step=0)
+    assert b["frames"].shape == (2, wcfg.encoder_seq, wcfg.d_model)
+    vcfg = reduced(ARCHS["llava-next-mistral-7b"])
+    b = make_batch(vcfg, 2, 8, seed=0, step=0)
+    assert b["patches"].shape == (2, vcfg.vision_tokens, vcfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (16, 8)).astype(np.float32))
+    t = quantize_tensor(x)
+    err = np.abs(np.asarray(dequantize(t) - x))
+    assert err.max() <= float(t.scale) * 0.5 + 1e-7
+
+
+def test_per_channel_beats_per_tensor():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (64, 8)).astype(np.float32)
+    x[:, 0] *= 100.0                      # one loud channel
+    xt = jnp.asarray(x)
+    e_tensor = np.abs(np.asarray(dequantize(quantize_tensor(xt)) - x)).mean()
+    e_chan = np.abs(np.asarray(
+        dequantize(quantize_tensor(xt, axis=1)) - x)).mean()
+    assert e_chan < e_tensor
+
+
+def test_fake_quant_straight_through_grad():
+    x = jnp.linspace(-1, 1, 32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v) ** 2))(x)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                      "b": jnp.zeros(3)},
+            "step": jnp.int32(7)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(t, str(tmp_path / "ck"), metadata={"step": 7}, n_shards=2)
+    loaded, meta = load_pytree(t, str(tmp_path / "ck"))
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    save_pytree(_tree(), str(tmp_path / "ck"))
+    bad = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree(bad, str(tmp_path / "ck"))
+
+
+def test_manager_async_keep_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for step in (1, 2, 3):
+        t = jax.tree.map(lambda a: a + 1 if a.dtype.kind == "f" else a, t)
+        mgr.save(step, t, metadata={"step": step})
+    mgr.wait()
+    assert mgr.all_steps() == [2, 3]      # keep-last-2
+    step, loaded, meta = mgr.restore(_tree())
+    assert step == 3 and meta["step"] == 3
+
+
+def test_crash_safe_tmp_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(), blocking=True)
+    os.makedirs(str(tmp_path / "step_0000000002.tmp"))  # simulated crash
+    assert mgr.latest_step() == 1
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance / elastic / stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_failure_detector_flags_silent_node():
+    clock = [0.0]
+    reg = HeartbeatRegistry(clock=lambda: clock[0])
+    det = FailureDetector(reg, min_timeout=5.0)
+    for t in range(5):
+        clock[0] = float(t)
+        reg.beat("a")
+        reg.beat("b")
+    for t in range(5, 12):                # b goes silent
+        clock[0] = float(t)
+        reg.beat("a")
+    assert det.check() == ["b"]
+    assert det.alive() == ["a"]
+    det.revive("b")
+    assert "b" not in det.failed
+
+
+def test_elastic_remesh_keeps_model_axis():
+    plan = plan_remesh(500, model_parallel=16, target_data_parallel=32)
+    assert plan.mesh_shape == (31, 16)
+    assert plan.chips_idle == 500 - 31 * 16
+    assert plan.grad_accum == 2           # 31 dp vs target 32 -> accum 2
+
+
+def test_elastic_remesh_shrinks_when_needed():
+    plan = plan_remesh(12, model_parallel=16, target_data_parallel=8,
+                       min_model_parallel=4)
+    assert plan.mesh_shape[1] in (4, 8)
+    assert plan.chips_used <= 12
+
+
+def test_elastic_impossible_raises():
+    with pytest.raises(ValueError):
+        plan_remesh(3, model_parallel=16, target_data_parallel=4,
+                    min_model_parallel=8)
+
+
+def test_straggler_detector_persistent_slow_host():
+    det = StragglerDetector(k=4.0, min_hits=3)
+    flagged = []
+    for step in range(6):
+        times = {f"h{i}": 1.0 + 0.01 * i for i in range(8)}
+        times["h7"] = 3.0                 # persistently slow
+        flagged = det.record_step(times)
+    assert flagged == ["h7"]
+
+
+def test_straggler_one_off_not_flagged():
+    det = StragglerDetector(min_hits=3)
+    for step in range(6):
+        times = {f"h{i}": 1.0 for i in range(8)}
+        if step == 2:
+            times["h3"] = 9.0             # transient hiccup
+        assert det.record_step(times) == []

@@ -1,0 +1,87 @@
+"""§Perf tuning knobs must preserve semantics (within quantization
+tolerance) — hillclimb wins that break the model don't count."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, reduced
+from repro.launch import meshctx, sharding, tuning
+from repro.launch.mesh import make_mesh
+from repro.models import model_zoo, transformer as T
+
+BATCH, SEQ = 2, 32
+
+
+def _build(name):
+    cfg = reduced(ARCHS[name])
+    params = model_zoo.init(cfg)
+    batch = model_zoo.dummy_batch(cfg, BATCH, SEQ)
+    return cfg, params, batch
+
+
+def test_int8_kv_cache_decode_close():
+    cfg, params, batch = _build("h2o-danube-3-4b")
+    ref = np.asarray(T.forward(cfg, params, batch, remat=False)[:, -1])
+    with tuning.tuned(int8_kv_cache=True):
+        state = T.init_decode_state(cfg, params, BATCH, SEQ)
+        assert state["caches"]["attn0"]["k"].dtype == jnp.int8
+        logits = None
+        for t in range(SEQ):
+            logits, state = T.decode_step(cfg, params, state,
+                                          batch["tokens"][:, t:t + 1])
+    # int8 cache: small quantization error, same predictions
+    np.testing.assert_allclose(np.asarray(logits), ref, rtol=0.3,
+                               atol=0.5)
+    assert (np.argmax(np.asarray(logits), -1)
+            == np.argmax(ref, -1)).mean() >= 0.5
+
+
+def test_seq_parallel_attention_exact_on_trivial_mesh():
+    """With |model| == 1 the reshards are no-ops -> bit-close output."""
+    cfg, params, batch = _build("phi3-medium-14b")
+    ref = np.asarray(T.forward(cfg, params, batch, remat=False))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with meshctx.use_mesh(mesh, data_axes=("data",)), \
+            tuning.tuned(attn_seq_parallel=True):
+        out = np.asarray(T.forward(cfg, params, batch, remat=False))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_fsdp_specs_shard_more():
+    from repro.launch import steps
+    cfg = ARCHS["phi4-mini-3.8b"]
+    mesh = make_mesh((1, 1), ("data", "model"))
+    base = sharding.param_specs(cfg, mesh)
+    fsdp = sharding.fsdp_specs(base, steps.abstract_params(cfg), mesh)
+    n_base = sum("data" in str(s) for s in jax.tree.leaves(
+        base, is_leaf=lambda x: isinstance(x, P)))
+    n_fsdp = sum("data" in str(s) for s in jax.tree.leaves(
+        fsdp, is_leaf=lambda x: isinstance(x, P)))
+    assert n_fsdp > n_base
+
+
+def test_int8_weights_abstract_params():
+    from repro.launch import steps
+    cfg = reduced(ARCHS["olmoe-1b-7b"])
+    with tuning.tuned(int8_weights=True):
+        tree = steps.abstract_params(cfg)
+    leaves = jax.tree.leaves(tree)
+    assert any(l.dtype == jnp.int8 for l in leaves if l.ndim >= 2)
+    assert all(l.dtype != jnp.int8 for l in leaves if l.ndim < 2)
+
+
+def test_int8_weights_forward_finite():
+    cfg, params, batch = _build("phi4-mini-3.8b")
+    # quantize the params the way the knob stores them
+    def q(a):
+        if hasattr(a, "ndim") and a.ndim >= 2 and \
+                jnp.issubdtype(a.dtype, jnp.floating):
+            return jnp.clip(jnp.round(a * 128), -127, 127).astype(jnp.int8)
+        return a
+    qparams = jax.tree.map(q, params)
+    with tuning.tuned(int8_weights=True):
+        logits = T.forward(cfg, qparams, batch, remat=False)
+    assert np.isfinite(np.asarray(logits)).all()
