@@ -6,28 +6,43 @@ Trends to validate: ResNet18 throughput scales with MG size with
 compute-dominated energy; EfficientNetB0 sees only modest gains while
 data movement (NoC + gmem) grows toward the paper's ~55% share at small
 MG / wide flit.
+
+Runs on the ``repro.explore`` engine: points fan out over a worker pool
+and land in the content-addressed result cache, so re-runs (and any
+other sweep touching the same points, e.g. Fig. 7) are free.
+
+    PYTHONPATH=src python -m benchmarks.fig6_arch_sweep [--quick]
+        [--pool N] [--no-cache]
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+from typing import Dict, List, Optional
 
-from repro.core import workloads
-from repro.core.dse import SWEEP_FLIT, SWEEP_MG, sweep_mg_flit
 from repro.core.mapping import CostParams
+from repro.explore import (ExplorationEngine, default_cache_dir,
+                           mg_flit_space)
+from repro.explore.space import SWEEP_FLIT, SWEEP_MG
 
 MODELS = ("resnet18", "efficientnetb0")
 RES = 112
+DEFAULT_POOL = 8
 
 
-def run(simulate: bool = True) -> List[Dict]:
+def run(simulate: bool = True, pool: Optional[int] = None,
+        cache: bool = True) -> List[Dict]:
+    pool = DEFAULT_POOL if pool is None else pool
+    space = mg_flit_space(SWEEP_MG, SWEEP_FLIT, strategies=("generic",))
     rows: List[Dict] = []
     for model in MODELS:
-        cg = workloads.build(model, res=RES).condense()
-        for pt in sweep_mg_flit(cg, strategy="generic",
-                                simulate=simulate,
-                                params=CostParams(batch=4)):
-            rows.append(pt.row())
+        eng = ExplorationEngine(model, res=RES,
+                                params=CostParams(batch=4), pool=pool,
+                                cache=default_cache_dir() if cache
+                                else None)
+        recs = eng.sweep(space,
+                         fidelity="simulate" if simulate else "analytic")
+        rows.extend(r.row() for r in recs)
     return rows
 
 
@@ -47,4 +62,13 @@ def report(rows: List[Dict]) -> str:
 
 
 if __name__ == "__main__":
-    print(report(run()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="analytic cost model instead of the simulator")
+    ap.add_argument("--pool", type=int, default=None,
+                    help=f"worker processes (default {DEFAULT_POOL})")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the on-disk result cache")
+    args = ap.parse_args()
+    print(report(run(simulate=not args.quick, pool=args.pool,
+                     cache=not args.no_cache)))

@@ -5,31 +5,79 @@ Claim to validate: compilation strategy can close (or invert) gaps
 between hardware configurations — a DP-compiled small-MG chip can beat a
 generically-compiled large-MG chip, which is the paper's argument for
 integrated SW/HW exploration.
+
+Runs on the ``repro.explore`` engine (pool + result cache) and appends a
+cycles-vs-energy Pareto frontier per model — the co-design trade-off
+curve the serial seed driver could not produce.
+
+    PYTHONPATH=src python -m benchmarks.fig7_codesign [--simulate]
+        [--pool N] [--no-cache]
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+from typing import Dict, List, Optional
 
-from repro.core import workloads
-from repro.core.dse import sweep_mg_flit
 from repro.core.mapping import CostParams
 from repro.core.partition import STRATEGIES
+from repro.explore import (DesignPoint, EvalRecord, ExplorationEngine,
+                           default_cache_dir, frontier_report,
+                           mg_flit_space)
+from repro.explore.space import SWEEP_FLIT, SWEEP_MG
 
 MODELS = ("resnet18", "efficientnetb0")
 RES = 112
+DEFAULT_POOL = 8
 
 
-def run(simulate: bool = False) -> List[Dict]:
+def run(simulate: bool = False, pool: Optional[int] = None,
+        cache: bool = True) -> List[Dict]:
+    pool = DEFAULT_POOL if pool is None else pool
+    space = mg_flit_space(SWEEP_MG, SWEEP_FLIT, strategies=STRATEGIES)
     rows: List[Dict] = []
     for model in MODELS:
-        cg = workloads.build(model, res=RES).condense()
-        for strat in STRATEGIES:
-            for pt in sweep_mg_flit(cg, strategy=strat,
-                                    simulate=simulate,
-                                    params=CostParams(batch=4)):
-                rows.append(pt.row())
+        eng = ExplorationEngine(model, res=RES,
+                                params=CostParams(batch=4), pool=pool,
+                                cache=default_cache_dir() if cache
+                                else None)
+        recs = eng.sweep(space,
+                         fidelity="simulate" if simulate else "analytic")
+        rows.extend(r.row() for r in recs)
     return rows
+
+
+def _rows_to_records(rows: List[Dict]) -> List[EvalRecord]:
+    """Lift flat row dicts back into records (rows carry every point
+    field plus the cycles/total-energy the frontier axes need)."""
+    return [
+        EvalRecord(
+            point=DesignPoint(macros_per_group=r["mg"],
+                              n_macro_groups=r["n_mg"],
+                              n_cores=r["cores"],
+                              flit_bytes=r["flit"],
+                              local_mem_kb=r["lmem_kb"],
+                              strategy=r["strategy"]),
+            model=r["model"],
+            fidelity="simulate" if r["simulated"] else "analytic",
+            cycles=r["cycles"], throughput_sps=r["throughput_sps"],
+            energy={"total": r["energy_total_mJ"] * 1e6},
+            error=r.get("error"))
+        for r in rows
+    ]
+
+
+def frontiers(rows: List[Dict]) -> str:
+    """Cycles/energy Pareto frontier per model from the given rows."""
+    recs = _rows_to_records(rows)
+    out: List[str] = []
+    for model in MODELS:
+        sub = [r for r in recs if r.model == model]
+        if not sub:
+            continue
+        out.append(f"Pareto frontier (cycles vs energy) — {model}:")
+        out.append(frontier_report(sub, axes=("cycles", "energy")))
+    return "\n".join(out)
 
 
 def report(rows: List[Dict]) -> str:
@@ -47,8 +95,19 @@ def report(rows: List[Dict]) -> str:
         verdict = "closes/inverts" if dp_small > gen_big else "narrows"
         out.append(f"-> {model}: dp@MG4 {dp_small:.1f} vs generic@MG16 "
                    f"{gen_big:.1f} sps ({verdict} the hw gap)")
+    out.append(frontiers(rows))
     return "\n".join(out)
 
 
 if __name__ == "__main__":
-    print(report(run()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--simulate", action="store_true",
+                    help="cycle-accurate simulator instead of the "
+                         "analytic model")
+    ap.add_argument("--pool", type=int, default=None,
+                    help=f"worker processes (default {DEFAULT_POOL})")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the on-disk result cache")
+    args = ap.parse_args()
+    print(report(run(simulate=args.simulate, pool=args.pool,
+                     cache=not args.no_cache)))

@@ -3,14 +3,27 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512"
                            ).strip()
 
-"""§Perf hillclimb driver (deliverable g).
+"""§Perf hillclimb driver.
 
-Runs the chosen (arch x shape) cells through the corrected roofline
-probes with tuning knobs flipped one hypothesis at a time, appending
-hypothesis -> change -> before -> after -> verdict records to
-``results/perf_log.json`` (rendered into EXPERIMENTS.md §Perf).
+Two modes:
 
-    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--cell N]
+* ``--mode arch`` (default) — hill-climb the CIM architecture space with
+  the ``repro.explore`` engine: restarted stochastic hill-climbing over
+  the full 5-dimension design space (MG size, MG count, core grid, flit
+  width, local-mem size, strategy), minimizing energy-delay product with
+  the analytic cost model, then validating the winner on the
+  cycle-accurate simulator.  Every evaluation is appended to
+  ``results/arch_hillclimb.jsonl`` and shared through the explore cache.
+
+* ``--mode ladder`` — the original roofline hypothesis ladders: chosen
+  (arch x shape) cells through the dry-run probes with tuning knobs
+  flipped one hypothesis at a time, appending records to
+  ``results/perf_log.json`` (rendered into EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [--mode arch]
+        [--model M] [--iters N] [--pool N]
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb --mode ladder
+        [--cell N] [--steps N]
 """
 
 import argparse
@@ -18,9 +31,7 @@ import json
 import time
 from typing import Dict, List
 
-from repro.launch import tuning
-
-# The three cells (chosen from the baseline table):
+# The three ladder cells (chosen from the baseline table):
 #  1. most collective-bound    2. worst capacity/memory (paper-technique:
 #  the planner's capacity wall)   3. bandwidth-bound decode (the paper's
 #  INT8 CIM inference story).
@@ -71,6 +82,49 @@ LADDERS: Dict[int, List] = {
 }
 
 OUT = "results/perf_log.json"
+ARCH_OUT = "results/arch_hillclimb.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# arch mode: hill-climb the CIM design space on the explore engine
+# ---------------------------------------------------------------------------
+
+
+def run_arch(model: str, iters: int, pool: int, seed: int) -> int:
+    from repro.core.mapping import CostParams
+    from repro.explore import (ExplorationEngine, by_edp,
+                               default_cache_dir, default_space,
+                               hill_climb)
+
+    eng = ExplorationEngine(model, res=112, params=CostParams(batch=4),
+                            pool=pool, cache=default_cache_dir(),
+                            store=ARCH_OUT)
+    space = default_space()
+    print(f"[arch] hill-climbing {space.describe()}\n"
+          f"[arch] model={model} objective=EDP iters={iters} "
+          f"pool={pool}", flush=True)
+    t0 = time.time()
+    res = hill_climb(eng, space, objective=by_edp, seed=seed,
+                     iters=iters, neighbors=4, restarts=3)
+    p = res.best.point
+    print(f"[arch] {res.n_evals} evaluations in "
+          f"{time.time() - t0:.1f}s (cache {eng.cache_stats()})")
+    print(f"[arch] best: {p.strategy} MG={p.macros_per_group} "
+          f"n_mg={p.n_macro_groups} cores={p.n_cores} "
+          f"flit={p.flit_bytes} lmem={p.local_mem_kb}KB -> "
+          f"EDP {res.best.edp:.4g} ({res.best.cycles:.0f} cyc, "
+          f"{res.best.energy_total / 1e6:.2f} mJ)")
+    sim = eng.evaluate_one(p, fidelity="simulate")
+    print(f"[arch] simulator validation: {sim.cycles:.0f} cycles, "
+          f"{sim.energy_total / 1e6:.2f} mJ, "
+          f"{sim.throughput_sps:.1f} sps")
+    print(f"[arch] trace appended to {ARCH_OUT}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# ladder mode: roofline hypothesis ladders (original driver)
+# ---------------------------------------------------------------------------
 
 
 def run_probe(arch: str, shape: str) -> Dict:
@@ -84,13 +138,8 @@ def run_probe(arch: str, shape: str) -> Dict:
     return keep
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--cell", type=int, default=None,
-                    help="run only this cell index (0..2)")
-    ap.add_argument("--steps", type=int, default=None,
-                    help="run only the first N ladder steps")
-    args = ap.parse_args()
+def run_ladder(cell, steps) -> int:
+    from repro.launch import tuning
 
     try:
         with open(OUT) as f:
@@ -98,8 +147,7 @@ def main() -> int:
     except (OSError, json.JSONDecodeError):
         log = []
 
-    cells = ([args.cell] if args.cell is not None
-             else list(range(len(CELLS))))
+    cells = [cell] if cell is not None else list(range(len(CELLS)))
     for ci in cells:
         arch, shape = CELLS[ci]
         key_base = f"{arch}|{shape}"
@@ -115,8 +163,8 @@ def main() -> int:
                         "result": base,
                         "wall_s": round(time.time() - t0, 1)})
             _save(log)
-        steps = LADDERS[ci][:args.steps] if args.steps else LADDERS[ci]
-        for si, (knobs, hypothesis) in enumerate(steps):
+        ladder = LADDERS[ci][:steps] if steps else LADDERS[ci]
+        for si, (knobs, hypothesis) in enumerate(ladder):
             name = "+".join(sorted(k for k, v in knobs.items()
                                    if v not in (False, "nothing")))
             if name in done:
@@ -146,6 +194,36 @@ def main() -> int:
             else:
                 print(f"  -> ERROR {entry.get('error')}", flush=True)
     return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", choices=("arch", "ladder"), default=None,
+                    help="arch: hill-climb the CIM design space "
+                         "(repro.explore); ladder: roofline hypothesis "
+                         "ladders. Defaults to arch, or to ladder when "
+                         "a ladder-only flag (--cell/--steps) is given")
+    ap.add_argument("--model", default="resnet18",
+                    help="[arch] workload to optimize the chip for")
+    ap.add_argument("--iters", type=int, default=24,
+                    help="[arch] hill-climb step budget")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="[arch] worker processes")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="[arch] search seed")
+    ap.add_argument("--cell", type=int, default=None,
+                    help="[ladder] run only this cell index (0..2)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="[ladder] run only the first N ladder steps")
+    args = ap.parse_args()
+    ladder_flags = args.cell is not None or args.steps is not None
+    if args.mode is None:
+        args.mode = "ladder" if ladder_flags else "arch"
+    if args.mode == "arch":
+        if ladder_flags:
+            ap.error("--cell/--steps apply to --mode ladder only")
+        return run_arch(args.model, args.iters, args.pool, args.seed)
+    return run_ladder(args.cell, args.steps)
 
 
 def _save(log) -> None:

@@ -1,51 +1,66 @@
 """Design-space exploration example (paper §IV-C + future-work DSE).
 
-Sweeps MG size x NoC flit x strategy for one workload with the analytic
-model, then validates the Pareto-best point with the cycle-accurate
-simulator — the paper's "systematic prototyping" workflow.
+Explores strategy x MG size x NoC flit for one workload on the
+``repro.explore`` engine: a two-fidelity successive-halving pass screens
+the whole grid with the analytic cost model (pool-parallel, cached),
+promotes the top-K points to the cycle-accurate simulator, and prints
+the cycles-vs-energy Pareto frontier — the paper's "systematic
+prototyping" workflow.
 
-    PYTHONPATH=src python examples/dse_sweep.py [model]
+    PYTHONPATH=src python examples/dse_sweep.py [model] [--pool N]
+        [--top-k K] [--full-space]
 """
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import workloads
-from repro.core.arch import default_chip
-from repro.core.dse import SWEEP_FLIT, SWEEP_MG, evaluate
 from repro.core.mapping import CostParams
 from repro.core.partition import STRATEGIES
+from repro.explore import (ExplorationEngine, by_edp, default_cache_dir,
+                           default_space, frontier_report, mg_flit_space,
+                           successive_halving)
 
 
 def main() -> int:
-    model = sys.argv[1] if len(sys.argv) > 1 else "mobilenetv2"
-    cg = workloads.build(model, res=112).condense()
-    params = CostParams(batch=4)
-    print(f"DSE over {model}: MG {SWEEP_MG} x flit {SWEEP_FLIT} x "
-          f"{STRATEGIES}")
-    best = None
-    for strat in STRATEGIES:
-        for mg in SWEEP_MG:
-            for flit in SWEEP_FLIT:
-                chip = default_chip(macros_per_group=mg, flit_bytes=flit)
-                pt = evaluate(cg, chip, strat, params, simulate=False)
-                edp = pt.cycles * pt.energy["total"]
-                marker = ""
-                if best is None or edp < best[0]:
-                    best = (edp, strat, mg, flit)
-                    marker = "  <- best EDP so far"
-                print(f"  {strat:8s} MG={mg:2d} flit={flit:2d}: "
-                      f"{pt.cycles:10.0f} cyc, "
-                      f"{pt.energy['total'] / 1e6:7.2f} mJ{marker}")
-    _, strat, mg, flit = best
-    print(f"\nvalidating best point ({strat}, MG={mg}, flit={flit}B) "
-          f"with the cycle-accurate simulator...")
-    chip = default_chip(macros_per_group=mg, flit_bytes=flit)
-    pt = evaluate(cg, chip, strat, params, simulate=True)
-    print(f"  simulated: {pt.cycles:.0f} cycles, "
-          f"{pt.energy['total'] / 1e6:.2f} mJ, "
-          f"{pt.throughput_sps:.1f} samples/s @1GHz")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("model", nargs="?", default="mobilenetv2")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="worker processes for the screening sweep")
+    ap.add_argument("--top-k", type=int, default=3,
+                    help="survivors promoted to the simulator")
+    ap.add_argument("--full-space", action="store_true",
+                    help="explore the full 5-dimension space instead of "
+                         "the Fig. 6 MG x flit grid")
+    args = ap.parse_args()
+
+    space = (default_space() if args.full_space
+             else mg_flit_space((4, 8, 16), (8, 16),
+                                strategies=STRATEGIES))
+    eng = ExplorationEngine(args.model, res=112,
+                            params=CostParams(batch=4), pool=args.pool,
+                            cache=default_cache_dir())
+    print(f"DSE over {args.model}: {space.describe()}")
+
+    result, screened = successive_halving(eng, space, top_k=args.top_k,
+                                          objective=by_edp)
+    print(f"\nscreened {len(screened)} points with the analytic model "
+          f"(cache: {eng.cache_stats()}), promoted {args.top_k} to the "
+          f"cycle-accurate simulator")
+
+    print("\nPareto frontier (cycles vs energy, analytic screen):")
+    print(frontier_report(screened, axes=("cycles", "energy")))
+
+    best = result.best
+    p = best.point
+    print(f"\nbest EDP after simulation: {p.strategy}, "
+          f"MG={p.macros_per_group}, flit={p.flit_bytes}B "
+          f"(cores={p.n_cores}, n_mg={p.n_macro_groups}, "
+          f"lmem={p.local_mem_kb}KB)")
+    print(f"  simulated: {best.cycles:.0f} cycles, "
+          f"{best.energy_total / 1e6:.2f} mJ, "
+          f"{best.throughput_sps:.1f} samples/s @1GHz")
     return 0
 
 

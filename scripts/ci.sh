@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a quick benchmark smoke run.
+#
+#   bash scripts/ci.sh
+#
+# Dependency install is best-effort so the script also works in
+# air-gapped containers that bake the toolchain into the image.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+pip install -r requirements.txt \
+    || echo "ci: pip install failed; assuming preinstalled deps" >&2
+
+set -e
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke (analytic, no roofline) =="
+python -m benchmarks.run --quick --skip-roofline > /dev/null
+
+echo "ci: OK"

@@ -1,30 +1,32 @@
-"""Design-space exploration driver (paper §IV-C).
+"""Deprecated shim over :mod:`repro.explore` (the DSE subsystem).
 
-Sweeps architectural parameters (MG size, NoC flit width, local-memory
-size, core count) x compilation strategies, evaluating each point with
-the analytic cost model (fast) or the cycle-accurate simulator (ground
-truth).  Powers the Fig. 6 / Fig. 7 benchmarks and the ``dse_sweep``
-example.
+The serial fixed-grid driver that used to live here was replaced by the
+``repro.explore`` package — declarative design spaces, a pool-parallel
+cached evaluation engine, search strategies and Pareto analysis.  This
+module keeps the original public surface (``DsePoint``, ``evaluate``,
+``sweep_mg_flit``, ``SWEEP_MG``, ``SWEEP_FLIT``) alive for existing
+callers; new code should import from :mod:`repro.explore`.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional
 
+from ..explore.engine import evaluate_chip
+from ..explore.space import SWEEP_FLIT, SWEEP_MG
 from .arch import ChipConfig, default_chip
-from .codegen import compile_model
-from .energy import DEFAULT_TABLE, energy_breakdown
 from .graph import CondensedGraph
 from .mapping import CostParams
-from .partition import partition
-from .simulator import Simulator
 
 __all__ = ["DsePoint", "evaluate", "sweep_mg_flit", "SWEEP_MG",
            "SWEEP_FLIT"]
 
-SWEEP_MG = (4, 8, 16)          # macros per MG (Fig. 6 x-axis)
-SWEEP_FLIT = (8, 16)           # NoC flit bytes (light/dark shading)
+warnings.warn(
+    "repro.core.dse is deprecated; use the repro.explore subsystem "
+    "(ExplorationEngine, DesignSpace, search, pareto) instead",
+    DeprecationWarning, stacklevel=2)
 
 
 @dataclass
@@ -56,22 +58,13 @@ class DsePoint:
 def evaluate(cg: CondensedGraph, chip: ChipConfig, strategy: str,
              params: Optional[CostParams] = None,
              simulate: bool = False) -> DsePoint:
-    params = params or CostParams(batch=4)
-    res = partition(cg, chip, strategy, params)
-    if simulate:
-        model = compile_model(res, batch=params.batch)
-        rep = Simulator(chip, model.isa, mode="perf").run_model(model)
-        cycles = rep.cycles
-        energy = rep.energy()
-    else:
-        cycles = res.latency_cycles()
-        energy = energy_breakdown(res.energy_events())
-    sps = params.batch / (cycles / (chip.clock_ghz * 1e9))
+    out = evaluate_chip(cg, chip, strategy, params,
+                        fidelity="simulate" if simulate else "analytic")
     return DsePoint(model=cg.name, strategy=strategy,
                     macros_per_group=chip.core.cim.macros_per_group,
-                    flit_bytes=chip.noc.flit_bytes, cycles=cycles,
-                    throughput_sps=sps, energy=energy,
-                    simulated=simulate)
+                    flit_bytes=chip.noc.flit_bytes, cycles=out["cycles"],
+                    throughput_sps=out["throughput_sps"],
+                    energy=out["energy"], simulated=simulate)
 
 
 def sweep_mg_flit(cg: CondensedGraph, strategy: str = "generic",

@@ -1,0 +1,46 @@
+"""``repro.explore`` — the design-space-exploration subsystem (§IV-C).
+
+Replaces the serial fixed-grid driver in :mod:`repro.core.dse` with:
+
+* :mod:`~repro.explore.space` — declarative ``ChipConfig`` x strategy
+  design spaces with constraints, sampling and mutation;
+* :mod:`~repro.explore.engine` — pool-parallel evaluation behind a
+  content-addressed on-disk result cache;
+* :mod:`~repro.explore.search` — grid / random / hill-climbing /
+  two-fidelity successive-halving strategies;
+* :mod:`~repro.explore.pareto` + :mod:`~repro.explore.records` —
+  JSONL result store and Pareto-frontier dominance analysis.
+
+Quickstart::
+
+    from repro.explore import (ExplorationEngine, default_space,
+                               pareto_frontier, successive_halving)
+    eng = ExplorationEngine("resnet18", res=112, pool=8)
+    result, screened = successive_halving(eng, default_space(), top_k=4)
+    front = pareto_frontier(screened, axes=("cycles", "energy"))
+"""
+
+from . import cache, engine, pareto, records, search, space
+from .cache import ResultCache, cache_key, default_cache_dir
+from .engine import ExplorationEngine, evaluate_chip
+from .pareto import (AXES, ParetoPoint, annotate, frontier_report,
+                     pareto_frontier)
+from .records import FIDELITIES, EvalRecord, RecordStore
+from .search import (SearchResult, by_cycles, by_edp, by_energy,
+                     grid_search, hill_climb, random_search,
+                     successive_halving)
+from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
+                    Dimension, default_space, mg_flit_space)
+
+__all__ = [
+    "cache", "engine", "pareto", "records", "search", "space",
+    "ResultCache", "cache_key", "default_cache_dir",
+    "ExplorationEngine", "evaluate_chip",
+    "AXES", "ParetoPoint", "annotate", "frontier_report",
+    "pareto_frontier",
+    "FIDELITIES", "EvalRecord", "RecordStore",
+    "SearchResult", "by_cycles", "by_edp", "by_energy", "grid_search",
+    "hill_climb", "random_search", "successive_halving",
+    "DesignPoint", "DesignSpace", "Dimension", "default_space",
+    "mg_flit_space", "SWEEP_MG", "SWEEP_FLIT",
+]

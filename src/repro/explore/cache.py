@@ -1,0 +1,123 @@
+"""Content-addressed on-disk cache for evaluation results.
+
+The cache key is the SHA-256 of a canonical-JSON description of
+everything that determines an evaluation's outcome: the workload
+(model name + geometry), the full ``ChipConfig`` dict, the compile
+strategy, the cost-model parameters, and the fidelity.  Identical
+(model, chip, strategy, mode) re-runs — and overlapping sweeps from
+*different* drivers — therefore share entries and are free.
+
+Entries are JSON files sharded by key prefix (``<root>/ab/<key>.json``)
+and written atomically (tmp + rename) so concurrent pool workers and
+concurrent sweeps never observe torn files.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+from ..core.arch import ChipConfig
+from ..core.mapping import CostParams
+
+__all__ = ["ResultCache", "default_cache_dir", "cache_key"]
+
+_ENV_VAR = "REPRO_EXPLORE_CACHE"
+_SCHEMA_VERSION = 1
+
+
+def default_cache_dir() -> str:
+    return os.environ.get(_ENV_VAR,
+                          os.path.join("results", "explore_cache"))
+
+
+def cache_key(model: str, chip: ChipConfig, strategy: str,
+              fidelity: str, params: Optional[CostParams] = None,
+              **extra: Any) -> str:
+    """Deterministic content hash of one evaluation's full inputs."""
+    desc: Dict[str, Any] = {
+        "v": _SCHEMA_VERSION,
+        "model": model,
+        "chip": chip.to_dict(),
+        "strategy": strategy,
+        "fidelity": fidelity,
+        "params": dataclasses.asdict(params) if params else None,
+        **extra,
+    }
+    # chip names are cosmetic — two identically-dimensioned chips with
+    # different labels must share cache entries
+    desc["chip"].pop("name", None)
+    blob = json.dumps(desc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """Sharded JSON file cache with hit/miss accounting."""
+
+    def __init__(self, root: Optional[str] = None) -> None:
+        self.root = root or default_cache_dir()
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".json")
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        try:
+            with open(self._path(key)) as f:
+                out = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return out
+
+    def put(self, key: str, value: Dict[str, Any]) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(value, f, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def __len__(self) -> int:
+        if not os.path.isdir(self.root):
+            return 0
+        return sum(1 for shard in os.listdir(self.root)
+                   if os.path.isdir(os.path.join(self.root, shard))
+                   for f in os.listdir(os.path.join(self.root, shard))
+                   if f.endswith(".json"))
+
+    def clear(self) -> int:
+        """Delete all entries; returns how many were removed."""
+        n = 0
+        if not os.path.isdir(self.root):
+            return 0
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            if not os.path.isdir(sdir):
+                continue
+            for f in os.listdir(sdir):
+                if f.endswith(".json"):
+                    os.unlink(os.path.join(sdir, f))
+                    n += 1
+        return n
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}

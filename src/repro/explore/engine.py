@@ -1,0 +1,251 @@
+"""Parallel evaluation engine for design-space exploration.
+
+Evaluates :class:`~repro.explore.space.DesignPoint` batches against one
+workload, at either fidelity:
+
+* ``"analytic"`` — partition + the analytic cost model (fast; the
+  screening fidelity for large sweeps and successive halving);
+* ``"simulate"`` — compile to ISA streams and run the cycle-accurate
+  simulator (ground truth; ~100x slower).
+
+The engine checks the content-addressed :class:`ResultCache` first, fans
+the misses out over a ``multiprocessing`` pool (the core pipeline is
+numpy-only, so workers are cheap to spawn and fork-safe), writes results
+back to the cache, and optionally appends every record to a JSONL
+:class:`RecordStore`.  Results always come back in input order, and a
+given key always produces an identical record — cached or not.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core import workloads
+from ..core.arch import ArchError, ChipConfig
+from ..core.codegen import compile_model
+from ..core.energy import energy_breakdown
+from ..core.graph import CondensedGraph
+from ..core.mapping import CostParams
+from ..core.partition import partition
+from ..core.simulator import Simulator
+from .cache import ResultCache, cache_key
+from .records import FIDELITIES, EvalRecord, RecordStore
+from .space import DesignPoint, DesignSpace
+
+__all__ = ["evaluate_chip", "ExplorationEngine"]
+
+
+def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
+                  params: Optional[CostParams] = None,
+                  fidelity: str = "analytic") -> Dict[str, Any]:
+    """Score one (graph, chip, strategy) at the given fidelity.
+
+    Returns ``{"cycles", "energy", "throughput_sps"}`` — the payload the
+    cache stores and :class:`EvalRecord` wraps.
+    """
+    if fidelity not in FIDELITIES:
+        raise ValueError(f"fidelity must be one of {FIDELITIES}, "
+                         f"got {fidelity!r}")
+    params = params or CostParams(batch=4)
+    res = partition(cg, chip, strategy, params)
+    if fidelity == "simulate":
+        model = compile_model(res, batch=params.batch)
+        rep = Simulator(chip, model.isa, mode="perf").run_model(model)
+        cycles = float(rep.cycles)
+        energy = rep.energy()
+    else:
+        cycles = float(res.latency_cycles())
+        energy = energy_breakdown(res.energy_events())
+    sps = params.batch / (cycles / (chip.clock_ghz * 1e9))
+    return {"cycles": cycles, "energy": dict(energy),
+            "throughput_sps": sps}
+
+
+# ---------------------------------------------------------------------------
+# Pool workers (module-level for spawn-context picklability)
+# ---------------------------------------------------------------------------
+
+_WORKER: Dict[str, Any] = {}
+
+
+def _init_worker(model: str, workload_kw: Dict[str, Any],
+                 params: CostParams) -> None:
+    _WORKER["cg"] = workloads.build(model, **workload_kw).condense()
+    _WORKER["params"] = params
+
+
+def _eval_worker(job: Tuple[DesignPoint, str]) -> Dict[str, Any]:
+    """Evaluate one point; infeasible points become error payloads
+    (cycles=inf) instead of killing the whole sweep."""
+    point, fidelity = job
+    t0 = time.perf_counter()
+    try:
+        out = evaluate_chip(_WORKER["cg"], point.chip(), point.strategy,
+                            _WORKER["params"], fidelity)
+    except Exception as e:        # noqa: BLE001 — point-local failure
+        out = {"cycles": float("inf"), "energy": {"total": float("inf")},
+               "throughput_sps": 0.0,
+               "error": f"{type(e).__name__}: {e}"}
+    out["wall_s"] = time.perf_counter() - t0
+    return out
+
+
+class ExplorationEngine:
+    """Cached, pool-parallel evaluator for one workload.
+
+    Parameters
+    ----------
+    model:
+        Workload name from :data:`repro.core.workloads.WORKLOADS`.
+    pool:
+        Worker processes; ``0``/``1`` evaluates serially in-process.
+    cache:
+        ``ResultCache`` instance, a directory path, or ``None`` to
+        disable caching entirely.
+    store:
+        Optional ``RecordStore`` (or path) appended to on every eval.
+    """
+
+    def __init__(self, model: str, params: Optional[CostParams] = None,
+                 pool: int = 0,
+                 cache: Union[ResultCache, str, None] = None,
+                 store: Union[RecordStore, str, None] = None,
+                 fidelity: str = "analytic",
+                 **workload_kw: Any) -> None:
+        # validate eagerly: an unknown model raising inside a pool
+        # worker's initializer would respawn workers forever
+        if model not in workloads.WORKLOADS:
+            raise KeyError(f"unknown workload {model!r}; "
+                           f"have {sorted(workloads.WORKLOADS)}")
+        self.model = model
+        self.workload_kw = dict(workload_kw)
+        self.params = params or CostParams(batch=4)
+        self.pool = int(pool)
+        self.fidelity = fidelity
+        if isinstance(cache, str):
+            cache = ResultCache(cache)
+        self.cache = cache
+        if isinstance(store, str):
+            store = RecordStore(store)
+        self.store = store
+        self._cg: Optional[CondensedGraph] = None
+
+    @property
+    def cg(self) -> CondensedGraph:
+        if self._cg is None:
+            self._cg = workloads.build(self.model,
+                                       **self.workload_kw).condense()
+        return self._cg
+
+    # -- keys ---------------------------------------------------------------
+
+    def _key(self, point: DesignPoint, fidelity: str) -> str:
+        return cache_key(self.model, point.chip(), point.strategy,
+                         fidelity, self.params,
+                         workload_kw=self.workload_kw)
+
+    # -- evaluation ---------------------------------------------------------
+
+    def evaluate(self, points: Sequence[DesignPoint],
+                 fidelity: Optional[str] = None) -> List[EvalRecord]:
+        """Evaluate points (cache-first, pool for misses), input order."""
+        fidelity = fidelity or self.fidelity
+        if fidelity not in FIDELITIES:
+            # caller bug, not an infeasible point — fail loudly instead
+            # of letting the per-point error capture swallow it
+            raise ValueError(f"fidelity must be one of {FIDELITIES}, "
+                             f"got {fidelity!r}")
+        points = list(points)
+        results: List[Optional[Dict[str, Any]]] = [None] * len(points)
+        hit: List[bool] = [False] * len(points)
+        keys: List[Optional[str]] = [None] * len(points)
+
+        # pre-screen chip construction in the parent: a point whose
+        # ChipConfig cannot even be built must become an error record on
+        # every path (cache keying calls point.chip() before workers
+        # would get a chance to capture the failure)
+        dispatchable: List[bool] = [True] * len(points)
+        for i, pt in enumerate(points):
+            try:
+                pt.chip()
+            except ArchError as e:
+                results[i] = {"cycles": float("inf"),
+                              "energy": {"total": float("inf")},
+                              "throughput_sps": 0.0, "wall_s": 0.0,
+                              "error": f"{type(e).__name__}: {e}"}
+                dispatchable[i] = False
+
+        if self.cache is not None:
+            for i, pt in enumerate(points):
+                if not dispatchable[i]:
+                    continue
+                keys[i] = self._key(pt, fidelity)
+                got = self.cache.get(keys[i])
+                if got is not None:
+                    results[i] = got
+                    hit[i] = True
+
+        miss_idx = [i for i, r in enumerate(results) if r is None]
+        jobs = [(points[i], fidelity) for i in miss_idx]
+        if jobs:
+            if self.pool > 1 and len(jobs) > 1:
+                fresh = self._run_pool(jobs)
+            else:
+                _WORKER["cg"] = self.cg       # built once per engine
+                _WORKER["params"] = self.params
+                fresh = [_eval_worker(j) for j in jobs]
+            for i, out in zip(miss_idx, fresh):
+                results[i] = out
+                # errors are deterministic for a given key but cheap to
+                # recompute; keep the cache clean of failure payloads
+                if self.cache is not None and keys[i] is not None \
+                        and "error" not in out:
+                    self.cache.put(keys[i], out)
+
+        records = [
+            EvalRecord(point=pt, model=self.model, fidelity=fidelity,
+                       cycles=out["cycles"],
+                       throughput_sps=out["throughput_sps"],
+                       energy=out["energy"], batch=self.params.batch,
+                       cache_hit=hit[i],
+                       wall_s=out.get("wall_s", 0.0),
+                       error=out.get("error"))
+            for i, (pt, out) in enumerate(zip(points, results))
+        ]
+        if self.store is not None:
+            self.store.extend(records)
+        return records
+
+    def evaluate_one(self, point: DesignPoint,
+                     fidelity: Optional[str] = None) -> EvalRecord:
+        return self.evaluate([point], fidelity)[0]
+
+    def sweep(self, space: DesignSpace,
+              fidelity: Optional[str] = None) -> List[EvalRecord]:
+        """Exhaustive grid evaluation of a space."""
+        return self.evaluate(space.points(), fidelity)
+
+    def _run_pool(self, jobs: List[Tuple[DesignPoint, str]]
+                  ) -> List[Dict[str, Any]]:
+        try:
+            # fork children inherit the parent's prepared graph — no
+            # per-worker workloads.build() in the initializer
+            ctx = mp.get_context("fork")
+            _WORKER["cg"] = self.cg
+            _WORKER["params"] = self.params
+            init, initargs = None, ()
+        except ValueError:
+            ctx = mp.get_context("spawn")
+            init = _init_worker
+            initargs = (self.model, self.workload_kw, self.params)
+        n = min(self.pool, len(jobs))
+        chunk = max(1, len(jobs) // (n * 4))
+        with ctx.Pool(processes=n, initializer=init,
+                      initargs=initargs) as pool:
+            return pool.map(_eval_worker, jobs, chunksize=chunk)
+
+    def cache_stats(self) -> Dict[str, int]:
+        return dict(self.cache.stats) if self.cache is not None \
+            else {"hits": 0, "misses": 0}

@@ -9,7 +9,12 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                              # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:               # jax 0.4.x: meshes are Auto-only
+    AxisType = None
 
 __all__ = ["make_production_mesh", "make_mesh", "data_axes_of",
            "MODEL_AXIS"]
@@ -18,8 +23,10 @@ MODEL_AXIS = "model"
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,0 +1,255 @@
+"""repro.explore subsystem: design space, cache determinism, search
+strategies, Pareto dominance, and engine/legacy-path equivalence."""
+
+import math
+
+import pytest
+
+from repro.core import workloads
+from repro.core.mapping import CostParams
+from repro.explore import (DesignPoint, DesignSpace, Dimension,
+                           EvalRecord, ExplorationEngine, RecordStore,
+                           ResultCache, annotate, by_edp, cache_key,
+                           grid_search, hill_climb, mg_flit_space,
+                           pareto_frontier, random_search,
+                           successive_halving)
+
+MODEL = "tiny_cnn"
+KW = dict(res=8)
+PARAMS = CostParams(batch=2)
+
+
+def make_engine(pool=0, cache=None, store=None):
+    return ExplorationEngine(MODEL, params=PARAMS, pool=pool,
+                             cache=cache, store=store, **KW)
+
+
+def toy_space():
+    return mg_flit_space((4, 8), (8, 16))     # 4 valid points
+
+
+# ---------------------------------------------------------------------------
+# design space
+# ---------------------------------------------------------------------------
+
+
+def test_space_enumerates_valid_grid():
+    sp = toy_space()
+    pts = sp.points()
+    assert len(pts) == 4 == len(sp)
+    assert len(set(pts)) == 4
+    for pt in pts:
+        chip = pt.chip()     # must construct without ArchError
+        assert chip.core.cim.macros_per_group == pt.macros_per_group
+        assert chip.noc.flit_bytes == pt.flit_bytes
+        assert pt in sp
+
+
+def test_space_constraints_filter_points():
+    sp = DesignSpace([Dimension("macros_per_group", (4, 8, 16))],
+                     constraints=[lambda p: p.macros_per_group <= 8])
+    assert [p.macros_per_group for p in sp] == [4, 8]
+
+
+def test_space_mutation_stays_valid():
+    import random
+    sp = toy_space()
+    rng = random.Random(0)
+    pt = sp.random_point(rng)
+    for _ in range(20):
+        new = sp.mutate(pt, rng)
+        assert new in sp and new != pt
+        pt = new
+
+
+def test_point_roundtrip_and_macro_count():
+    pt = DesignPoint(macros_per_group=4, n_macro_groups=8, n_cores=16)
+    assert DesignPoint.from_dict(pt.to_dict()) == pt
+    assert pt.total_macros == 16 * 8 * 4
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+
+
+def _rec(cycles, energy, mg=8):
+    return EvalRecord(point=DesignPoint(macros_per_group=mg),
+                      model=MODEL, fidelity="analytic", cycles=cycles,
+                      throughput_sps=1.0,
+                      energy={"total": energy})
+
+
+def test_pareto_frontier_hand_built():
+    recs = [
+        _rec(10, 100, mg=2),    # frontier (best cycles)
+        _rec(20, 50, mg=4),     # frontier
+        _rec(40, 20, mg=8),     # frontier (best energy)
+        _rec(25, 60, mg=16),    # dominated by (20, 50)
+        _rec(50, 120, mg=16),   # dominated by everything
+    ]
+    front = pareto_frontier(recs, axes=("cycles", "energy"))
+    assert [(r.cycles, r.energy_total) for r in front] == \
+        [(10, 100), (20, 50), (40, 20)]
+
+    meta = {p.record.cycles: p for p in annotate(recs)}
+    assert meta[25].dominated_by == 1 and not meta[25].on_frontier
+    assert meta[50].dominated_by == 4 and meta[50].rank > 0
+    assert all(meta[c].rank == 0 for c in (10, 20, 40))
+
+
+def test_pareto_three_objectives_and_errors():
+    good = _rec(10, 100)
+    bad = _rec(math.inf, math.inf)
+    bad.error = "InfeasibleModel: nope"
+    front = pareto_frontier([good, bad], axes=("cycles", "energy",
+                                               "macros"))
+    assert front == [good]
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_deterministic_and_discriminating():
+    pt = DesignPoint()
+    k1 = cache_key(MODEL, pt.chip(), "generic", "analytic", PARAMS)
+    k2 = cache_key(MODEL, pt.chip(), "generic", "analytic", PARAMS)
+    assert k1 == k2
+    assert k1 != cache_key(MODEL, pt.chip(), "dp", "analytic", PARAMS)
+    assert k1 != cache_key(MODEL, pt.chip(), "generic", "simulate",
+                           PARAMS)
+    other = pt.replace(flit_bytes=16).chip()
+    assert k1 != cache_key(MODEL, other, "generic", "analytic", PARAMS)
+    # cosmetic chip names must not split cache entries
+    import dataclasses
+    renamed = dataclasses.replace(pt.chip(), name="whatever")
+    assert k1 == cache_key(MODEL, renamed, "generic", "analytic", PARAMS)
+
+
+def test_cache_hit_miss_and_identical_records(tmp_path):
+    cache = ResultCache(str(tmp_path / "cache"))
+    eng = make_engine(cache=cache)
+    sp = toy_space()
+    first = eng.sweep(sp)
+    assert all(not r.cache_hit for r in first)
+    assert cache.misses == len(first) and cache.hits == 0
+    assert len(cache) == len(first)
+
+    second = eng.sweep(sp)
+    assert all(r.cache_hit for r in second)
+    for a, b in zip(first, second):
+        assert a.point == b.point
+        assert a.cycles == b.cycles
+        assert a.energy == b.energy
+        assert a.throughput_sps == b.throughput_sps
+
+    # a fresh engine over the same cache dir also hits
+    eng2 = make_engine(cache=ResultCache(str(tmp_path / "cache")))
+    third = eng2.sweep(sp)
+    assert all(r.cache_hit for r in third)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_legacy_dse_evaluate():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.core import dse
+    cg = workloads.build(MODEL, **KW).condense()
+    recs = make_engine().sweep(toy_space())
+    for rec in recs:
+        legacy = dse.evaluate(cg, rec.point.chip(), rec.point.strategy,
+                              PARAMS, simulate=False)
+        assert rec.cycles == legacy.cycles
+        assert rec.energy == legacy.energy
+        assert rec.throughput_sps == pytest.approx(
+            legacy.throughput_sps)
+
+
+def test_engine_pool_matches_serial():
+    sp = toy_space()
+    serial = make_engine(pool=0).sweep(sp)
+    pooled = make_engine(pool=2).sweep(sp)
+    assert [r.point for r in serial] == [r.point for r in pooled]
+    for a, b in zip(serial, pooled):
+        assert a.cycles == b.cycles and a.energy == b.energy
+
+
+def test_engine_survives_infeasible_points():
+    # transformer attention needs dynamic weights; a 1-core chip with
+    # minimal CIM capacity cannot host resnet18 at res 112 in one pass —
+    # but rather than constructing a guaranteed failure we inject one
+    # via a point whose chip() violates mapping assumptions at runtime.
+    eng = ExplorationEngine("transformer", params=CostParams(batch=1),
+                            pool=0, cache=None, n_layers=1, d_model=64,
+                            n_heads=2, seq=8)
+    pts = [DesignPoint(macros_per_group=2, n_macro_groups=8,
+                       n_cores=16, local_mem_kb=256)]
+    recs = eng.evaluate(pts)
+    assert len(recs) == 1      # never raises out of evaluate()
+    r = recs[0]
+    assert r.ok or (math.isinf(r.cycles) and r.error)
+
+
+def test_engine_invalid_chip_point_errors_on_both_cache_paths(tmp_path):
+    # chip() itself raises ArchError for flit_bytes=0; the cache path
+    # keys points via chip() in the parent, so this must degrade to an
+    # error record there too, not just in the worker
+    bad = DesignPoint(flit_bytes=0)
+    good = DesignPoint()
+    for cache in (None, ResultCache(str(tmp_path / "c"))):
+        recs = make_engine(cache=cache).evaluate([bad, good])
+        assert not recs[0].ok and math.isinf(recs[0].cycles)
+        assert "ArchError" in recs[0].error
+        assert recs[1].ok and math.isfinite(recs[1].cycles)
+
+
+def test_record_store_roundtrip(tmp_path):
+    path = str(tmp_path / "out" / "trace.jsonl")
+    store = RecordStore(path)
+    eng = make_engine(store=store)
+    recs = eng.sweep(toy_space())
+    loaded = store.load()
+    assert len(loaded) == len(recs)
+    for a, b in zip(recs, loaded):
+        assert a.point == b.point and a.cycles == b.cycles
+        assert a.to_dict() == b.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+
+def test_random_and_hillclimb_find_known_best():
+    eng = make_engine()
+    sp = toy_space()
+    exhaustive = grid_search(eng, sp, objective=by_edp)
+    best_point = exhaustive.best.point
+
+    rnd = random_search(eng, sp, n=len(sp), objective=by_edp, seed=3)
+    assert rnd.best.point == best_point
+
+    hc = hill_climb(eng, sp, objective=by_edp, seed=1, iters=12,
+                    neighbors=3, restarts=3)
+    assert hc.best.point == best_point
+    assert hc.n_evals <= len(sp)      # seen-set dedup on a tiny space
+
+
+def test_successive_halving_promotes_to_simulator():
+    eng = make_engine()
+    res, screened = successive_halving(eng, toy_space(), top_k=2,
+                                       objective=by_edp)
+    assert len(screened) == 4
+    assert all(r.fidelity == "analytic" for r in screened)
+    assert len(res.history) == 2
+    assert all(r.fidelity == "simulate" for r in res.history)
+    # the winner is one of the analytic top-2
+    ranked = sorted(screened, key=by_edp)[:2]
+    assert res.best.point in {r.point for r in ranked}

@@ -1,6 +1,10 @@
 """ISA conformance: encode/decode round-trip, extensibility, error checks."""
 
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional "
+                           "hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.isa import (FORMATS, Instr, InstrDescriptor, Isa, IsaError,

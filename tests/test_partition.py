@@ -4,6 +4,10 @@ independent brute force), strategy dominance, capacity handling."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional "
+                           "hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import workloads

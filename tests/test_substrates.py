@@ -7,6 +7,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional "
+                           "hypothesis dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
