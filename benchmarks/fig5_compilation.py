@@ -6,6 +6,10 @@ both baselines — up to 2.8x speedup and 61.7% energy reduction — with
 the largest wins on the compact models (MobileNetV2, EfficientNetB0),
 where capacity-first partitioning leaves too few vacant cores for
 opportunistic duplication.
+
+Runs on the :mod:`repro.flow` pipeline: one ``compile`` per strategy,
+scored by the analytic or the simulator backend; the condense pass is
+shared across strategies through the pipeline's pass-output cache.
 """
 
 from __future__ import annotations
@@ -13,12 +17,12 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+from repro import flow
 from repro.core import workloads
 from repro.core.arch import default_chip
-from repro.core.codegen import compile_model
 from repro.core.mapping import CostParams
-from repro.core.partition import STRATEGIES, partition
-from repro.core.simulator import Simulator
+from repro.core.partition import STRATEGIES
+from repro.flow import CompileOptions
 
 MODELS = ("resnet18", "vgg19", "mobilenetv2", "efficientnetb0")
 RES = 112            # keep the cycle-accurate runs CPU-friendly
@@ -27,23 +31,18 @@ BATCH = 4
 
 def run(simulate: bool = True) -> List[Dict]:
     chip = default_chip()
-    params = CostParams(batch=BATCH)
+    opts = CompileOptions(params=CostParams(batch=BATCH),
+                          fidelity="simulate" if simulate
+                          else "analytic")
     rows: List[Dict] = []
     for model in MODELS:
         cg = workloads.build(model, res=RES).condense()
         base = None
         for strat in STRATEGIES:
             t0 = time.time()
-            res = partition(cg, chip, strat, params)
-            if simulate:
-                compiled = compile_model(res, batch=BATCH)
-                rep = Simulator(chip, compiled.isa,
-                                mode="perf").run_model(compiled)
-                cycles, energy = rep.cycles, rep.energy()["total"]
-            else:
-                from repro.core.energy import energy_breakdown
-                cycles = res.latency_cycles()
-                energy = energy_breakdown(res.energy_events())["total"]
+            art = flow.compile(cg, chip, opts, strategy=strat)
+            rep = art.evaluate()
+            cycles, energy = rep.cycles, rep.energy["total"]
             if strat == "generic":
                 base = (cycles, energy)
             rows.append({
@@ -51,7 +50,7 @@ def run(simulate: bool = True) -> List[Dict]:
                 "cycles": cycles, "energy_nJ": energy,
                 "speed_norm": base[0] / cycles,
                 "energy_norm": energy / base[1],
-                "n_stages": res.n_stages,
+                "n_stages": art.partition.n_stages,
                 "wall_s": round(time.time() - t0, 1),
             })
     return rows

@@ -9,7 +9,11 @@ MG / wide flit.
 
 Runs on the ``repro.explore`` engine: points fan out over a worker pool
 and land in the content-addressed result cache, so re-runs (and any
-other sweep touching the same points, e.g. Fig. 7) are free.
+other sweep touching the same points, e.g. Fig. 7) are free.  The
+engine evaluates through the :mod:`repro.flow` pass pipeline —
+``flow.compile(...).evaluate(backend=...)`` is the only compile path —
+so in-process re-evaluations of a point at a second fidelity reuse the
+cached partition pass output.
 
     PYTHONPATH=src python -m benchmarks.fig6_arch_sweep [--quick]
         [--pool N] [--no-cache]

@@ -6,7 +6,8 @@ between hardware configurations — a DP-compiled small-MG chip can beat a
 generically-compiled large-MG chip, which is the paper's argument for
 integrated SW/HW exploration.
 
-Runs on the ``repro.explore`` engine (pool + result cache) and appends a
+Runs on the ``repro.explore`` engine (pool + result cache, evaluating
+through the :mod:`repro.flow` pass pipeline) and appends a
 cycles-vs-energy Pareto frontier per model — the co-design trade-off
 curve the serial seed driver could not produce.
 

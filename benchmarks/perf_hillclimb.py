@@ -12,8 +12,11 @@ Two modes:
   the full 5-dimension design space (MG size, MG count, core grid, flit
   width, local-mem size, strategy), minimizing energy-delay product with
   the analytic cost model, then validating the winner on the
-  cycle-accurate simulator.  Every evaluation is appended to
-  ``results/arch_hillclimb.jsonl`` and shared through the explore cache.
+  cycle-accurate simulator.  Evaluations run through the
+  :mod:`repro.flow` pipeline, so the final simulator validation of the
+  winning point reuses its cached partition.  Every evaluation is
+  appended to ``results/arch_hillclimb.jsonl`` and shared through the
+  explore cache.
 
 * ``--mode ladder`` — the original roofline hypothesis ladders: chosen
   (arch x shape) cells through the dry-run probes with tuning knobs

@@ -5,7 +5,12 @@ Explores strategy x MG size x NoC flit for one workload on the
 the whole grid with the analytic cost model (pool-parallel, cached),
 promotes the top-K points to the cycle-accurate simulator, and prints
 the cycles-vs-energy Pareto frontier — the paper's "systematic
-prototyping" workflow.
+prototyping" workflow.  Evaluation runs through the
+:mod:`repro.flow` pipeline, whose pass-output cache lets an in-process
+promotion reuse the partition computed during the analytic screen.
+
+The same sweep is available without a script as
+``python -m repro.explore sweep MODEL --top-k K``.
 
     PYTHONPATH=src python examples/dse_sweep.py [model] [--pool N]
         [--top-k K] [--full-space]

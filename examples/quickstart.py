@@ -1,7 +1,8 @@
 """CIMFlow quickstart: a small CNN through the whole stack in ~30 s.
 
-    graph -> condense -> Alg.1 DP partition -> OP-level mapping ->
-    ISA codegen -> cycle-accurate + functional simulation -> oracle check
+    graph -> repro.flow.compile (condense -> Alg.1 DP partition ->
+    OP-level mapping -> ISA codegen passes) -> Artifact.evaluate on the
+    analytic / cycle-accurate / functional backends -> oracle check
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,13 +14,12 @@ import numpy as np
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
+from repro import flow
 from repro.core import ref, workloads
 from repro.core.arch import default_chip
-from repro.core.codegen import compile_model
-from repro.core.energy import energy_breakdown
 from repro.core.mapping import CostParams
-from repro.core.partition import STRATEGIES, partition
-from repro.core.simulator import Simulator
+from repro.core.partition import STRATEGIES
+from repro.flow import CompileOptions
 
 
 def main() -> int:
@@ -32,11 +32,15 @@ def main() -> int:
     print(chip.describe())
 
     # 2. the paper's three compilation strategies ------------------------------
-    params = CostParams(batch=2)
-    results = {s: partition(cg, chip, s, params) for s in STRATEGIES}
-    for s, r in results.items():
-        print(f"  {s:8s}: {r.latency_cycles():8.0f} cycles "
-              f"({r.n_stages} stages)")
+    # one options record per strategy; the analytic backend scores the
+    # partition without generating any ISA
+    opts = CompileOptions(params=CostParams(batch=2), batch=2)
+    arts = {s: flow.compile(cg, chip, opts, strategy=s)
+            for s in STRATEGIES}
+    for s, art in arts.items():
+        rep = art.evaluate("analytic")
+        print(f"  {s:8s}: {rep.cycles:8.0f} cycles "
+              f"({art.partition.n_stages} stages)")
 
     # 3. compile the DP plan to ISA programs ----------------------------------
     # weights: random int8 in the im2col matrix layout
@@ -57,25 +61,29 @@ def main() -> int:
             biases[g.idx] = rng.integers(-40, 40, g.gemm_n, np.int32)
     inputs = rng.integers(-8, 8, (2, 8, 8, 3)).astype(np.int8)
     qp = ref.auto_quant(cg, weights, biases, inputs)
-    model = compile_model(results["dp"], batch=2, quant=qp,
-                          strict_lmem=True)
+    # fidelity="func": the codegen pass runs eagerly (and is cached —
+    # note the partition pass comes back from the pipeline cache)
+    art = flow.compile(cg, chip, opts, strategy="dp", quant=qp,
+                       strict_lmem=True, fidelity="func")
+    print(art.describe())
+    model = art.model
     print(f"compiled: {model.total_instrs} instructions across "
           f"{len(model.stages)} stage programs")
 
     # 4. functional simulation, checked against the INT8 oracle ---------------
-    img = model.build_gmem_image(weights, biases, inputs)
-    rep = Simulator(chip, model.isa, mode="func").run_model(model, img)
+    img = art.build_gmem_image(weights, biases, inputs)
+    rep = art.evaluate("func", gmem_image=img)
     oracle = ref.run_reference(cg, weights, biases, qp, inputs)
     last = len(cg) - 1
     for s in range(2):
-        addr, nb = model.output_addr(last, s)
-        got = rep.gmem[addr - 0x10000000: addr - 0x10000000 + nb]
+        addr, nb = art.output_addr(last, s)
+        got = rep.sim.gmem[addr - 0x10000000: addr - 0x10000000 + nb]
         assert np.array_equal(got, oracle[last][s].reshape(-1)), s
     print("functional ISS output == numpy INT8 oracle  [OK]")
 
     # 5. performance + energy report -------------------------------------------
-    print(f"simulated: {rep.summary()}")
-    bd = rep.energy()
+    print(f"simulated: {rep.sim.summary()}")
+    bd = rep.energy
     top = sorted((k, v) for k, v in bd.items() if k != "total")
     print("energy breakdown:",
           ", ".join(f"{k}={100 * v / bd['total']:.0f}%" for k, v in top))

@@ -3,6 +3,11 @@
 Pipeline:  workloads -> graph (condense) -> partition (Alg. 1 / baselines)
            -> oplevel (virtual/physical mapping) -> codegen (ISA streams)
            -> simulator (cycle-accurate perf / functional ISS) -> energy.
+
+These modules are the *pass implementations*; the user-facing compile
+API is :mod:`repro.flow` (``flow.compile(workload, chip, options)``
+with pluggable passes and evaluation backends).  The free functions
+``partition()`` and ``compile_model()`` remain as deprecated shims.
 """
 
 from . import (arch, codegen, energy, graph, isa, mapping, oplevel,

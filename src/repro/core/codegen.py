@@ -43,6 +43,7 @@ them (the paper's INT8 benchmarks are relu-family in our graph builders).
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -320,14 +321,19 @@ class _Lmem:
         self.n_seg = chip.core.local_mem.n_segments
         self.strict = strict
         self.cursor = [0] * self.n_seg
+        # perf-mode out-of-bounds segments, surfaced as one warning per
+        # stage by _compile_stage (the silent-overflow footgun fix)
+        self.overflows: List[Tuple[int, str]] = []
 
     def alloc(self, seg: int, nbytes: int, what: str) -> int:
         addr = seg * self.seg + self.cursor[seg]
         self.cursor[seg] += (max(nbytes, 0) + 63) & ~63
-        if self.strict and self.cursor[seg] > self.seg:
-            raise CodegenError(
-                f"lmem segment {seg} overflow allocating {what} "
-                f"({self.cursor[seg]} > {self.seg})")
+        if self.cursor[seg] > self.seg:
+            if self.strict:
+                raise CodegenError(
+                    f"lmem segment {seg} overflow allocating {what} "
+                    f"({self.cursor[seg]} > {self.seg})")
+            self.overflows.append((seg, what))
         return addr
 
 
@@ -476,6 +482,25 @@ def compile_model(result: PartitionResult, batch: Optional[int] = None,
                   quant: Optional[Dict[int, QuantParams]] = None,
                   isa: Optional[Isa] = None,
                   strict_lmem: bool = False) -> CompiledModel:
+    """Deprecated free-function entry point.
+
+    Use ``repro.flow.compile(...)`` and ``Artifact.model`` — the
+    pass-based pipeline instruments codegen and caches its output.
+    This shim stays for existing callers and the golden tests.
+    """
+    warnings.warn(
+        "repro.core.codegen.compile_model() is deprecated; use "
+        "repro.flow.compile(workload, chip, options) and the returned "
+        "Artifact (its .model / .evaluate(backend=...))",
+        DeprecationWarning, stacklevel=2)
+    return _compile_model(result, batch, quant, isa, strict_lmem)
+
+
+def _compile_model(result: PartitionResult, batch: Optional[int] = None,
+                   quant: Optional[Dict[int, QuantParams]] = None,
+                   isa: Optional[Isa] = None,
+                   strict_lmem: bool = False) -> CompiledModel:
+    """Internal codegen body (the :mod:`repro.flow` codegen pass)."""
     cg = result.cg
     chip = result.chip
     isa = isa or default_isa()
@@ -581,6 +606,16 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
     for e in emitters.values():
         e.halt()
     _validate_channels(emitters)
+    over = [(c, seg, what) for c, lm in sorted(lmems.items())
+            for seg, what in lm.overflows]
+    if over:
+        c0, seg0, what0 = over[0]
+        more = f" (+{len(over) - 1} more)" if len(over) > 1 else ""
+        warnings.warn(
+            f"perf-mode lmem overflow: segment {seg0} allocating {what0} "
+            f"on core {c0}{more}; timing is unaffected, but functional "
+            f"runs require strict_lmem=True", RuntimeWarning,
+            stacklevel=3)
     return StageProgram(stage=sp, schedules=schedules,
                         programs={c: e.prog for c, e in emitters.items()})
 
@@ -636,6 +671,7 @@ def _plan_buffers(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
                   chip: ChipConfig, lmems, em, op_owner) -> Dict:
     """Per-(group, replica) lmem buffers; per-core address maps."""
     g = cg[sched.gid]
+    tag = f"group {g.idx} ({g.name})"
     for c in rep.cores:
         em(c)                                      # materialize lmem
     out: Dict = {"in": {}, "stage": {}, "wstage": {}, "psum": {},
@@ -646,53 +682,53 @@ def _plan_buffers(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
     in_nb = max(r1 - r0, 0) * _in_row_bytes(sched)
     out["in_row0"] = r0
     for c in rep.cores:
-        out["in"][c] = lmems[c].alloc(0, in_nb, f"{g.name} input")
+        out["in"][c] = lmems[c].alloc(0, in_nb, f"{tag} input")
         out["stage"][c] = lmems[c].alloc(
             1, sched.m_chunk * sched.k_total if spec is not None else 0,
-            f"{g.name} im2col")
+            f"{tag} im2col")
         out["wstage"][c] = lmems[c].alloc(
             1, chip.core.cim.macro.rows * chip.core.cim.group_n_out,
-            f"{g.name} wstage")
+            f"{tag} wstage")
         out["psum"][c] = lmems[c].alloc(
-            2, sched.m_chunk * sched.n_total * 4, f"{g.name} psum")
+            2, sched.m_chunk * sched.n_total * 4, f"{tag} psum")
         out["qtmp"][c] = lmems[c].alloc(
-            2, sched.m_chunk * sched.n_total, f"{g.name} qtmp")
+            2, sched.m_chunk * sched.n_total, f"{tag} qtmp")
         if "bias" in sched.vector_ops:
             out["bias"][c] = lmems[c].alloc(2, sched.n_total * 4,
-                                            f"{g.name} bias")
+                                            f"{tag} bias")
     asm = rep.cores[0]
     y0, y1 = _conv_rows_to_compute(cg, sched, rep)
     if spec is not None:
         conv_nb = max(y1 - y0, 0) * spec.wo * sched.n_total
     else:
         conv_nb = max(rep.m_hi - rep.m_lo, 0) * sched.n_total
-    out["conv"] = lmems[asm].alloc(3, conv_nb, f"{g.name} conv-out")
+    out["conv"] = lmems[asm].alloc(3, conv_nb, f"{tag} conv-out")
     out["conv_row0"] = y0
     _, row_nb, _ = _out_geometry(cg, sched)
     o0, o1 = _owned_out_rows(cg, sched, rep)
     if sched.pool is not None or sched.gap:
         out["final"] = lmems[asm].alloc(3, max(o1 - o0, 1) * row_nb,
-                                        f"{g.name} final")
+                                        f"{tag} final")
         out["final_row0"] = o0
     else:
         out["final"] = out["conv"]
         out["final_row0"] = y0 if spec is not None else rep.m_lo
     if sched.gap:
         out["gapacc"] = lmems[asm].alloc(2, sched.n_total * 4,
-                                         f"{g.name} gapacc")
+                                         f"{tag} gapacc")
         out["gaptmp"] = lmems[asm].alloc(2, sched.n_total * 4,
-                                         f"{g.name} gaptmp")
+                                         f"{tag} gaptmp")
         if sched.pool is not None:
             p0, p1 = _pooled_rows(cg, sched, rep)
             out["pooled"] = lmems[asm].alloc(
                 3, max(p1 - p0, 1) * sched.pool.wo * sched.n_total,
-                f"{g.name} pooled")
+                f"{tag} pooled")
     _, side = _main_and_skip_preds(cg, g, op_owner)
     if side:
         k0, k1, krow_nb = _side_rows(cg, sched, rep)
         out["skip"] = lmems[asm].alloc(
             0, max(max(k1 - k0, 1) * krow_nb, (o1 - o0) * row_nb),
-            f"{g.name} skip")
+            f"{tag} skip")
     return out
 
 

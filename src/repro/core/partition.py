@@ -17,6 +17,7 @@ stage); inside a stage, groups form an inter-operator pipeline across cores.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -257,9 +258,10 @@ def greedy_partition(cg: CondensedGraph, chip: ChipConfig,
 # ---------------------------------------------------------------------------
 
 
-def partition(cg: CondensedGraph, chip: ChipConfig,
-              strategy: str = "dp",
-              params: Optional[CostParams] = None) -> PartitionResult:
+def _partition(cg: CondensedGraph, chip: ChipConfig,
+               strategy: str = "dp",
+               params: Optional[CostParams] = None) -> PartitionResult:
+    """Internal strategy dispatcher (the :mod:`repro.flow` pass bodies)."""
     if strategy == "dp":
         return dp_partition(cg, chip, params)
     if strategy == "generic":
@@ -268,6 +270,23 @@ def partition(cg: CondensedGraph, chip: ChipConfig,
         return greedy_partition(cg, chip, params, opportunistic_mapping,
                                 "cim-mlc")
     raise KeyError(f"unknown strategy {strategy!r}")
+
+
+def partition(cg: CondensedGraph, chip: ChipConfig,
+              strategy: str = "dp",
+              params: Optional[CostParams] = None) -> PartitionResult:
+    """Deprecated free-function entry point.
+
+    Use ``repro.flow.compile(cg, chip, CompileOptions(strategy=...))``
+    — the pass-based pipeline adds per-pass instrumentation and caches
+    partition outputs across fidelities.  This shim stays for existing
+    callers and the golden equivalence tests.
+    """
+    warnings.warn(
+        "repro.core.partition.partition() is deprecated; use "
+        "repro.flow.compile(workload, chip, CompileOptions(strategy=...))",
+        DeprecationWarning, stacklevel=2)
+    return _partition(cg, chip, strategy, params)
 
 
 STRATEGIES = ("generic", "cim-mlc", "dp")

@@ -20,7 +20,7 @@ Quickstart::
     front = pareto_frontier(screened, axes=("cycles", "energy"))
 """
 
-from . import cache, engine, pareto, records, search, space
+from . import cache, cli, engine, pareto, records, search, space
 from .cache import ResultCache, cache_key, default_cache_dir
 from .engine import ExplorationEngine, evaluate_chip
 from .pareto import (AXES, ParetoPoint, annotate, frontier_report,
@@ -33,7 +33,7 @@ from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
                     Dimension, default_space, mg_flit_space)
 
 __all__ = [
-    "cache", "engine", "pareto", "records", "search", "space",
+    "cache", "cli", "engine", "pareto", "records", "search", "space",
     "ResultCache", "cache_key", "default_cache_dir",
     "ExplorationEngine", "evaluate_chip",
     "AXES", "ParetoPoint", "annotate", "frontier_report",

@@ -10,16 +10,27 @@ strategy, the cost-model parameters, and the fidelity.  Identical
 Entries are JSON files sharded by key prefix (``<root>/ab/<key>.json``)
 and written atomically (tmp + rename) so concurrent pool workers and
 concurrent sweeps never observe torn files.
+
+Eviction: entries are never aged out automatically, but a cache
+constructed with ``max_age_days`` / ``max_entries`` (or given them at
+call time) can be compacted with :meth:`ResultCache.prune` — drop
+entries older than the age limit (file mtime), then the oldest entries
+beyond the count limit.  ``python -m repro.explore cache prune`` wires
+this to the command line; pruning is safe alongside running sweeps
+(``put`` retries when its shard directory is concurrently removed,
+readers tolerate vanished files).
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import hashlib
 import json
 import os
 import tempfile
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.arch import ChipConfig
 from ..core.mapping import CostParams
@@ -56,15 +67,99 @@ def cache_key(model: str, chip: ChipConfig, strategy: str,
 
 
 class ResultCache:
-    """Sharded JSON file cache with hit/miss accounting."""
+    """Sharded JSON file cache with hit/miss accounting and an
+    optional eviction policy (applied by :meth:`prune`, not on every
+    ``put`` — pruning scans the whole tree)."""
 
-    def __init__(self, root: Optional[str] = None) -> None:
+    def __init__(self, root: Optional[str] = None,
+                 max_age_days: Optional[float] = None,
+                 max_entries: Optional[int] = None) -> None:
         self.root = root or default_cache_dir()
+        self.max_age_days = max_age_days
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], key + ".json")
+
+    def _entries(self, want_mtimes: bool = True
+                 ) -> List[Tuple[float, str]]:
+        """All entry files as sorted ``(mtime, path)``, oldest first.
+
+        ``want_mtimes=False`` skips the per-file stat and the sort
+        (``__len__``/``clear`` only need the paths).
+        """
+        out: List[Tuple[float, str]] = []
+        if not os.path.isdir(self.root):
+            return out
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            try:
+                names = os.listdir(sdir)
+            except (NotADirectoryError, FileNotFoundError):
+                continue              # stray file / concurrent rmdir
+            for f in names:
+                if not f.endswith(".json"):
+                    continue
+                path = os.path.join(sdir, f)
+                if not want_mtimes:
+                    out.append((0.0, path))
+                    continue
+                try:
+                    out.append((os.path.getmtime(path), path))
+                except OSError:
+                    continue          # concurrently pruned
+        if want_mtimes:
+            out.sort()
+        return out
+
+    def prune(self, max_age_days: Optional[float] = None,
+              max_entries: Optional[int] = None,
+              now: Optional[float] = None) -> int:
+        """Evict entries by age and count; returns how many were removed.
+
+        Age first (mtime older than ``max_age_days``), then the oldest
+        entries beyond ``max_entries``.  Limits default to the ones the
+        cache was constructed with; ``None`` disables that criterion.
+        ``now`` is injectable for tests.
+        """
+        max_age_days = (self.max_age_days if max_age_days is None
+                        else max_age_days)
+        max_entries = (self.max_entries if max_entries is None
+                       else max_entries)
+        entries = self._entries()
+        now = time.time() if now is None else now
+        doomed: List[str] = []
+        if max_age_days is not None:
+            cutoff = now - max_age_days * 86400.0
+            i = bisect.bisect_left(entries, (cutoff,))
+            doomed.extend(p for _, p in entries[:i])
+            entries = entries[i:]
+        if max_entries is not None and len(entries) > max_entries:
+            extra = len(entries) - max_entries
+            doomed.extend(p for _, p in entries[:extra])
+            del entries[:extra]
+        removed = 0
+        for path in doomed:
+            try:
+                os.unlink(path)
+                removed += 1
+            except OSError:
+                pass                  # concurrently pruned
+        self._remove_empty_shards()
+        return removed
+
+    def _remove_empty_shards(self) -> None:
+        if not os.path.isdir(self.root):
+            return
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            if os.path.isdir(sdir) and not os.listdir(sdir):
+                try:
+                    os.rmdir(sdir)
+                except OSError:
+                    pass
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         try:
@@ -78,9 +173,17 @@ class ResultCache:
 
     def put(self, key: str, value: Dict[str, Any]) -> None:
         path = self._path(key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
+        sdir = os.path.dirname(path)
+        for _ in range(8):
+            os.makedirs(sdir, exist_ok=True)
+            try:
+                fd, tmp = tempfile.mkstemp(dir=sdir, suffix=".tmp")
+                break
+            except FileNotFoundError:
+                continue    # concurrent prune rmdir'd the empty shard
+        else:
+            raise OSError(f"cache shard {sdir} keeps vanishing "
+                          f"(concurrent prune?)")
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(value, f, sort_keys=True)
@@ -96,26 +199,18 @@ class ResultCache:
         return os.path.exists(self._path(key))
 
     def __len__(self) -> int:
-        if not os.path.isdir(self.root):
-            return 0
-        return sum(1 for shard in os.listdir(self.root)
-                   if os.path.isdir(os.path.join(self.root, shard))
-                   for f in os.listdir(os.path.join(self.root, shard))
-                   if f.endswith(".json"))
+        return len(self._entries(want_mtimes=False))
 
     def clear(self) -> int:
         """Delete all entries; returns how many were removed."""
         n = 0
-        if not os.path.isdir(self.root):
-            return 0
-        for shard in os.listdir(self.root):
-            sdir = os.path.join(self.root, shard)
-            if not os.path.isdir(sdir):
-                continue
-            for f in os.listdir(sdir):
-                if f.endswith(".json"):
-                    os.unlink(os.path.join(sdir, f))
-                    n += 1
+        for _, path in self._entries(want_mtimes=False):
+            try:
+                os.unlink(path)
+                n += 1
+            except OSError:
+                pass
+        self._remove_empty_shards()
         return n
 
     @property

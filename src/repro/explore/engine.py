@@ -22,14 +22,12 @@ import multiprocessing as mp
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from .. import flow
 from ..core import workloads
 from ..core.arch import ArchError, ChipConfig
-from ..core.codegen import compile_model
-from ..core.energy import energy_breakdown
 from ..core.graph import CondensedGraph
 from ..core.mapping import CostParams
-from ..core.partition import partition
-from ..core.simulator import Simulator
+from ..flow import CompileOptions
 from .cache import ResultCache, cache_key
 from .records import FIDELITIES, EvalRecord, RecordStore
 from .space import DesignPoint, DesignSpace
@@ -42,25 +40,22 @@ def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
                   fidelity: str = "analytic") -> Dict[str, Any]:
     """Score one (graph, chip, strategy) at the given fidelity.
 
-    Returns ``{"cycles", "energy", "throughput_sps"}`` — the payload the
-    cache stores and :class:`EvalRecord` wraps.
+    Runs on the :mod:`repro.flow` pass pipeline, so a point promoted
+    from the analytic screen to the simulator in the same process
+    reuses its cached partition instead of re-partitioning.  Returns
+    ``{"cycles", "energy", "throughput_sps"}`` — the payload the cache
+    stores and :class:`EvalRecord` wraps.
     """
     if fidelity not in FIDELITIES:
         raise ValueError(f"fidelity must be one of {FIDELITIES}, "
                          f"got {fidelity!r}")
     params = params or CostParams(batch=4)
-    res = partition(cg, chip, strategy, params)
-    if fidelity == "simulate":
-        model = compile_model(res, batch=params.batch)
-        rep = Simulator(chip, model.isa, mode="perf").run_model(model)
-        cycles = float(rep.cycles)
-        energy = rep.energy()
-    else:
-        cycles = float(res.latency_cycles())
-        energy = energy_breakdown(res.energy_events())
-    sps = params.batch / (cycles / (chip.clock_ghz * 1e9))
-    return {"cycles": cycles, "energy": dict(energy),
-            "throughput_sps": sps}
+    art = flow.compile(cg, chip,
+                       CompileOptions(strategy=strategy, params=params,
+                                      fidelity=fidelity))
+    rep = art.evaluate()
+    return {"cycles": rep.cycles, "energy": dict(rep.energy),
+            "throughput_sps": rep.throughput_sps}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,54 @@
+"""``repro.flow`` — the pass-based compiler pipeline (user-facing API).
+
+CIMFlow's integrated-workflow claim, as an API: one declarative entry
+point bridging compilation and evaluation, with pluggable passes and
+backends::
+
+    from repro import flow
+    from repro.flow import CompileOptions
+
+    art = flow.compile("resnet18", chip,
+                       CompileOptions(strategy="dp", batch=4,
+                                      workload_kw={"res": 112}))
+    print(art.describe())                 # instrumented pass trace
+    fast = art.evaluate("analytic")       # cost model
+    true = art.evaluate("simulate")       # cycle-accurate (lazy codegen)
+
+* :class:`CompileOptions` — strategy / batch / quant / strict_lmem /
+  fidelity in one frozen record.
+* :class:`Pass` + :func:`register_pass` — partition strategies and
+  future optimizations plug in as ``partition:<name>`` passes without
+  touching callers; every pass is timed, summarized, and optionally
+  JSON-dumped (``dump_dir``).
+* :class:`Pipeline` — runs the pass chain behind an LRU output cache
+  keyed by ``(workload, chip, options-prefix)``; re-compiling at a new
+  fidelity reuses the cached ``PartitionResult``.
+* :class:`Backend` + :func:`register_backend` — the analytic cost model
+  and the cycle-accurate / functional simulator behind one
+  ``Artifact.evaluate(backend=...)`` surface.
+
+The legacy free functions (``repro.core.partition.partition``,
+``repro.core.codegen.compile_model``) remain as deprecated shims over
+the same internals.
+"""
+
+from .backends import (BACKENDS, AnalyticBackend, Backend, EvalReport,
+                       SimulatorBackend, backend_for_fidelity,
+                       register_backend, resolve_backend)
+from .options import FIDELITIES, CompileOptions
+from .passes import (PASS_REGISTRY, CodegenPass, CondensePass, Pass,
+                     PartitionPass, PassRecord, PipelineContext,
+                     get_pass, partition_pass_name, register_pass)
+from .pipeline import (Artifact, Pipeline, compile, default_pipeline,
+                       workload_fingerprint)
+
+__all__ = [
+    "compile", "CompileOptions", "FIDELITIES", "Artifact", "Pipeline",
+    "default_pipeline", "workload_fingerprint",
+    "Pass", "PassRecord", "PipelineContext", "PASS_REGISTRY",
+    "register_pass", "get_pass", "partition_pass_name",
+    "CondensePass", "PartitionPass", "CodegenPass",
+    "Backend", "EvalReport", "AnalyticBackend", "SimulatorBackend",
+    "BACKENDS", "register_backend", "resolve_backend",
+    "backend_for_fidelity",
+]

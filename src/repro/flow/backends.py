@@ -1,0 +1,166 @@
+"""Evaluation backends for :class:`repro.flow.Artifact`.
+
+A :class:`Backend` turns a compiled artifact into an
+:class:`EvalReport` — the one result shape shared by every fidelity:
+
+* :class:`AnalyticBackend` — the mapping cost model's stage latencies
+  and energy-event ledger (no codegen; fast screening fidelity).
+* :class:`SimulatorBackend` — runs the per-core ISA streams on the
+  cycle-accurate simulator (``mode="perf"``) or the functional ISS
+  (``mode="func"``, which additionally needs a ``gmem_image``).
+
+Backends resolve by name through :data:`BACKENDS` (``"analytic"``,
+``"simulate"``/``"perf"``, ``"func"``), so
+``artifact.evaluate(backend="simulate")`` and custom registered
+backends compose without touching callers.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Union
+
+import numpy as np
+
+from ..core.energy import energy_breakdown
+from ..core.simulator import SimReport, Simulator
+
+__all__ = ["EvalReport", "Backend", "AnalyticBackend",
+           "SimulatorBackend", "BACKENDS", "resolve_backend",
+           "register_backend", "backend_for_fidelity"]
+
+
+@dataclass
+class EvalReport:
+    """One artifact evaluation, identical shape across fidelities."""
+
+    backend: str                   # resolved backend name
+    cycles: float
+    energy: Dict[str, float]       # nJ breakdown, incl. "total"
+    throughput_sps: float          # samples/s at the chip clock
+    batch: int
+    wall_s: float = 0.0
+    sim: Optional[SimReport] = None   # simulator backends only
+
+    @property
+    def energy_total(self) -> float:
+        return self.energy.get("total", 0.0)
+
+    @property
+    def edp(self) -> float:
+        return self.cycles * self.energy_total
+
+    def summary(self) -> str:
+        return (f"[{self.backend}] {self.cycles:.0f} cycles, "
+                f"{self.energy_total / 1e6:.3f} mJ, "
+                f"{self.throughput_sps:.1f} samples/s "
+                f"(batch={self.batch})")
+
+
+def _throughput(chip: Any, cycles: float, batch: int) -> float:
+    if cycles <= 0:
+        return 0.0
+    return batch / (cycles / (chip.clock_ghz * 1e9))
+
+
+class Backend:
+    """Evaluation backend protocol: ``evaluate(artifact) -> EvalReport``."""
+
+    name: str = "backend"
+    requires_model: bool = False
+
+    def evaluate(self, artifact: Any, **kw: Any) -> EvalReport:
+        raise NotImplementedError
+
+
+class AnalyticBackend(Backend):
+    """The mapping cost model — no ISA, no simulator."""
+
+    name = "analytic"
+    requires_model = False
+
+    def evaluate(self, artifact: Any, **kw: Any) -> EvalReport:
+        if kw:
+            raise TypeError(f"analytic backend takes no extra "
+                            f"arguments, got {sorted(kw)}")
+        t0 = time.perf_counter()
+        res = artifact.partition
+        batch = artifact.options.resolved_batch()
+        cycles = float(res.latency_cycles(batch))
+        energy = dict(energy_breakdown(res.energy_events(batch)))
+        return EvalReport(
+            backend=self.name, cycles=cycles, energy=energy,
+            throughput_sps=_throughput(artifact.chip, cycles, batch),
+            batch=batch, wall_s=time.perf_counter() - t0)
+
+
+class SimulatorBackend(Backend):
+    """Cycle-accurate (``perf``) / functional ISS (``func``) execution."""
+
+    requires_model = True
+
+    def __init__(self, mode: str = "perf",
+                 name: Optional[str] = None) -> None:
+        if mode not in ("perf", "func"):
+            raise ValueError(f"mode must be 'perf' or 'func', "
+                             f"got {mode!r}")
+        self.mode = mode
+        self.name = name or ("simulate" if mode == "perf" else "func")
+
+    def evaluate(self, artifact: Any,
+                 gmem_image: Optional[np.ndarray] = None,
+                 **kw: Any) -> EvalReport:
+        if kw:
+            raise TypeError(f"simulator backend takes only gmem_image, "
+                            f"got {sorted(kw)}")
+        t0 = time.perf_counter()
+        model = artifact.ensure_model()
+        sim = Simulator(artifact.chip, model.isa, mode=self.mode)
+        rep = sim.run_model(model, gmem_image=gmem_image)
+        batch = model.batch
+        return EvalReport(
+            backend=self.name, cycles=float(rep.cycles),
+            energy=dict(rep.energy()),
+            throughput_sps=_throughput(artifact.chip, rep.cycles, batch),
+            batch=batch, wall_s=time.perf_counter() - t0, sim=rep)
+
+
+BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(b: Backend, *aliases: str,
+                     replace: bool = False) -> Backend:
+    for key in (b.name,) + aliases:
+        if key in BACKENDS and not replace:
+            raise ValueError(f"backend {key!r} already registered")
+        BACKENDS[key] = b
+    return b
+
+
+register_backend(AnalyticBackend())
+register_backend(SimulatorBackend("perf"), "perf")
+register_backend(SimulatorBackend("func"))
+
+
+def resolve_backend(backend: Union[str, Backend, None],
+                    fidelity: str = "analytic") -> Backend:
+    """Name | instance | None (-> the fidelity's default backend)."""
+    if backend is None:
+        backend = backend_for_fidelity(fidelity)
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]
+        except KeyError:
+            raise KeyError(f"unknown backend {backend!r}; registered: "
+                           f"{sorted(BACKENDS)}") from None
+    if isinstance(backend, Backend):
+        return backend
+    raise TypeError(f"backend must be a name or Backend instance, "
+                    f"got {type(backend).__name__}")
+
+
+def backend_for_fidelity(fidelity: str) -> str:
+    """CompileOptions.fidelity -> default backend name."""
+    return {"analytic": "analytic", "simulate": "simulate",
+            "func": "func"}[fidelity]

@@ -1,0 +1,308 @@
+"""The :mod:`repro.flow` pipeline: ``compile(workload, chip, options)``.
+
+Replaces the ad-hoc ``partition() -> compile_model() -> Simulator()``
+call chain with one stable entry point:
+
+    art = repro.flow.compile("resnet18", chip,
+                             CompileOptions(strategy="dp",
+                                            workload_kw={"res": 112}))
+    report = art.evaluate(backend="analytic")      # or "simulate"/"func"
+
+The pipeline is a chain of registered passes (condense ->
+``partition:<strategy>`` -> codegen-on-demand), each instrumented with
+wall time and a one-line IR summary (``Artifact.describe()``), and each
+memoized in an LRU cache keyed by ``(workload, chip, options-prefix)``
+— only the option fields a pass declares in ``depends`` enter its key.
+A re-compile at a different *fidelity* therefore reuses the
+already-computed ``PartitionResult`` instead of re-partitioning, which
+is what makes cross-fidelity promotions (analytic screen -> simulator
+validation) cheap.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.arch import ChipConfig
+from ..core.codegen import CompiledModel
+from ..core.graph import CondensedGraph, Graph
+from ..core.partition import PartitionResult
+from .backends import Backend, EvalReport, resolve_backend
+from .options import CompileOptions
+from .passes import (CodegenPass, Pass, PassRecord, PipelineContext,
+                     get_pass, partition_pass_name)
+
+__all__ = ["Artifact", "Pipeline", "compile", "default_pipeline",
+           "workload_fingerprint"]
+
+
+def workload_fingerprint(workload: Any) -> str:
+    """Structural identity of a workload for pass-cache keying.
+
+    Named workloads key by name (geometry lives in ``workload_kw``,
+    which the condense pass declares as a dependency); graph objects key
+    by a digest of their op (or group) structure, so two separately
+    built but identical graphs share cache entries.
+    """
+    if isinstance(workload, str):
+        return f"name:{workload}"
+    src = workload.source if isinstance(workload, CondensedGraph) \
+        else workload
+    if isinstance(src, Graph):
+        desc = [(op.idx, op.name, op.kind, tuple(op.inputs),
+                 tuple(op.out_shape), sorted(op.attrs.items()),
+                 op.gemm_m, op.gemm_k, op.gemm_n, op.groups)
+                for op in src.ops]
+        kind = "graph"
+    elif isinstance(workload, CondensedGraph):    # condensed, no source
+        desc = [(g.idx, g.name, tuple(g.preds), g.gemm_m, g.gemm_k,
+                 g.gemm_n, g.groups, g.weight_bytes, g.in_bytes,
+                 g.out_bytes, sorted(g.vector_work.items()))
+                for g in workload]
+        kind = "cg"
+    else:
+        raise TypeError(f"workload must be a name, Graph or "
+                        f"CondensedGraph, got {type(workload).__name__}")
+    blob = repr((workload.name, desc)).encode()
+    return f"{kind}:{hashlib.sha256(blob).hexdigest()}"
+
+
+def _chip_fingerprint(chip: ChipConfig) -> str:
+    d = chip.to_dict()
+    d.pop("name", None)          # labels are cosmetic
+    blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Artifact:
+    """The result of :func:`compile`: partitioned (and, on demand,
+    fully code-generated) model plus the instrumented pass trace."""
+
+    workload: Any
+    chip: ChipConfig
+    options: CompileOptions
+    cg: CondensedGraph
+    partition: PartitionResult
+    trace: List[PassRecord] = field(default_factory=list)
+    _pipeline: Optional["Pipeline"] = None
+    _chain_key: str = ""         # cache-key prefix up to the partition
+    _model: Optional[CompiledModel] = None
+
+    # -- lazy codegen ---------------------------------------------------------
+
+    @property
+    def model(self) -> Optional[CompiledModel]:
+        """The compiled ISA streams, or ``None`` before codegen ran."""
+        return self._model
+
+    def ensure_model(self) -> CompiledModel:
+        """Run (or fetch from cache) the codegen pass."""
+        if self._model is None:
+            ctx = PipelineContext(workload=self.workload, chip=self.chip,
+                                  options=self.options, cg=self.cg,
+                                  partition=self.partition)
+            pipe = self._pipeline or default_pipeline()
+            out, rec, _ = pipe._run_pass(get_pass("codegen"), ctx,
+                                         self._chain_key)
+            self._model = out
+            self.trace.append(rec)
+        return self._model
+
+    # -- evaluation -----------------------------------------------------------
+
+    def evaluate(self, backend: Union[str, Backend, None] = None,
+                 **kw: Any) -> EvalReport:
+        """Score this artifact on a backend (default: the one matching
+        ``options.fidelity``)."""
+        b = resolve_backend(backend, self.options.fidelity)
+        return b.evaluate(self, **kw)
+
+    # -- conveniences ---------------------------------------------------------
+
+    def build_gmem_image(self, weights, biases, inputs) -> np.ndarray:
+        return self.ensure_model().build_gmem_image(weights, biases,
+                                                    inputs)
+
+    def output_addr(self, gid: int, sample: int) -> Tuple[int, int]:
+        return self.ensure_model().output_addr(gid, sample)
+
+    @property
+    def total_instrs(self) -> int:
+        return self.ensure_model().total_instrs
+
+    def pass_record(self, name: str) -> Optional[PassRecord]:
+        """Latest trace record for a pass (``"partition"`` matches the
+        strategy-qualified partition pass)."""
+        for rec in reversed(self.trace):
+            if rec.name == name or (name == "partition"
+                                    and rec.name.startswith("partition:")):
+                return rec
+        return None
+
+    def describe(self) -> str:
+        head = (f"flow artifact: '{self.cg.name}' on "
+                f"'{self.chip.name}' — {self.options.describe()}")
+        return "\n".join([head] + [r.describe() for r in self.trace])
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+class Pipeline:
+    """Pass runner with an LRU pass-output cache.
+
+    One pipeline's cache is shared across all its ``compile()`` calls;
+    the module-level :func:`default_pipeline` gives every caller in a
+    process cross-fidelity partition reuse for free.  ``cache_size=0``
+    disables caching.  The default cap is sized for full design-space
+    sweeps (~1k chips x strategies; cached ``PartitionResult`` objects
+    are a few KB each — codegen outputs are never cached) so an
+    analytic screen's partitions survive until the simulator
+    promotion.
+    """
+
+    def __init__(self, cache_size: int = 8192) -> None:
+        self.cache_size = int(cache_size)
+        self._cache: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # -- cache ----------------------------------------------------------------
+
+    def _cache_get(self, key: str) -> Tuple[bool, Any]:
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return True, self._cache[key]
+        self.misses += 1
+        return False, None
+
+    def _cache_put(self, key: str, value: Any) -> None:
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def cache_info(self) -> Dict[str, int]:
+        return {"entries": len(self._cache), "hits": self.hits,
+                "misses": self.misses}
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    # -- pass execution -------------------------------------------------------
+
+    def _run_pass(self, p: Pass, ctx: PipelineContext,
+                  prev_key: str) -> Tuple[Any, PassRecord, str]:
+        import time
+        subset = ctx.options.subset_key(p.depends)
+        key = hashlib.sha256(
+            f"{prev_key}|{p.name}|{subset}".encode()).hexdigest()
+        t0 = time.perf_counter()
+        cached, out = (self._cache_get(key) if p.cacheable
+                       else (False, None))
+        if not cached:
+            out = p.run(ctx)
+            if p.cacheable:
+                self._cache_put(key, out)
+        dump_path = None
+        if ctx.options.dump_dir:      # dump cache hits too — the dump
+            dump_path = p.write_dump(out, ctx.options.dump_dir, key)
+            # dir may differ from (or postdate) the run that filled
+            # the cache
+        p.apply(ctx, out)
+        rec = PassRecord(name=p.name,
+                         wall_s=time.perf_counter() - t0,
+                         cached=cached, summary=p.summarize(out),
+                         key=key[:16], dump_path=dump_path)
+        return out, rec, key
+
+    # -- compilation ----------------------------------------------------------
+
+    def compile(self, workload: Any, chip: ChipConfig,
+                options: Optional[CompileOptions] = None,
+                **kw: Any) -> Artifact:
+        """Compile ``workload`` for ``chip`` under ``options``.
+
+        Extra keyword arguments are folded into the options
+        (``compile(cg, chip, strategy="dp", batch=2)``).  Codegen runs
+        eagerly for simulator fidelities and lazily (on
+        ``Artifact.ensure_model`` / a simulator backend) otherwise.
+        """
+        if options is None:
+            options = CompileOptions(**kw)
+        elif kw:
+            options = options.replace(**kw)
+
+        try:
+            part_pass = get_pass(partition_pass_name(options.strategy))
+        except KeyError:
+            raise KeyError(
+                f"unknown strategy {options.strategy!r}: no "
+                f"{partition_pass_name(options.strategy)!r} pass "
+                f"registered") from None
+
+        ctx = PipelineContext(workload=workload, chip=chip,
+                              options=options)
+        # condense is chip-independent: keying it on the workload alone
+        # lets one cache entry serve every chip in an arch sweep.  The
+        # chip fingerprint enters the chain between condense and the
+        # (chip-dependent) partition/codegen passes.
+        base = hashlib.sha256(
+            workload_fingerprint(workload).encode()).hexdigest()
+
+        trace: List[PassRecord] = []
+        _, rec, key = self._run_pass(get_pass("condense"), ctx, base)
+        trace.append(rec)
+        key = hashlib.sha256(
+            f"{key}|chip:{_chip_fingerprint(chip)}".encode()).hexdigest()
+        _, rec, key = self._run_pass(part_pass, ctx, key)
+        trace.append(rec)
+
+        art = Artifact(workload=workload, chip=chip, options=options,
+                       cg=ctx.cg, partition=ctx.partition, trace=trace,
+                       _pipeline=self, _chain_key=key)
+        if options.fidelity != "analytic":
+            art.ensure_model()
+        return art
+
+
+_DEFAULT_PIPELINE: Optional[Pipeline] = None
+
+
+def default_pipeline() -> Pipeline:
+    """The process-wide pipeline (shared pass-output cache)."""
+    global _DEFAULT_PIPELINE
+    if _DEFAULT_PIPELINE is None:
+        _DEFAULT_PIPELINE = Pipeline()
+    return _DEFAULT_PIPELINE
+
+
+def compile(workload: Any, chip: ChipConfig,
+            options: Optional[CompileOptions] = None, *,
+            pipeline: Optional[Pipeline] = None,
+            **kw: Any) -> Artifact:
+    """The stable compile entry point (see :class:`Pipeline.compile`).
+
+    Uses the process-wide default pipeline unless one is given, so
+    successive compiles of the same (workload, chip, options-prefix)
+    hit the pass cache.
+    """
+    return (pipeline or default_pipeline()).compile(workload, chip,
+                                                    options, **kw)

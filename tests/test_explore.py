@@ -253,3 +253,114 @@ def test_successive_halving_promotes_to_simulator():
     # the winner is one of the analytic top-2
     ranked = sorted(screened, key=by_edp)[:2]
     assert res.best.point in {r.point for r in ranked}
+
+
+# ---------------------------------------------------------------------------
+# cache eviction
+# ---------------------------------------------------------------------------
+
+
+def _seed_cache(tmp_path, n=5, t0=1_000_000.0):
+    """Cache with n entries whose mtimes are one day apart."""
+    import os
+    cache = ResultCache(str(tmp_path / "evict"))
+    paths = []
+    for i in range(n):
+        key = cache_key(f"m{i}", DesignPoint().chip(), "dp", "analytic")
+        cache.put(key, {"cycles": float(i)})
+        path = cache._path(key)
+        os.utime(path, (t0 + 86400 * i, t0 + 86400 * i))
+        paths.append(path)
+    return cache, paths, t0
+
+
+def test_cache_prune_by_age(tmp_path):
+    import os
+    cache, paths, t0 = _seed_cache(tmp_path)
+    now = t0 + 4 * 86400 + 10        # entries 0..3 are > 1 day old
+    removed = cache.prune(max_age_days=1, now=now)
+    assert removed == 4
+    assert len(cache) == 1
+    assert os.path.exists(paths[4]) and not os.path.exists(paths[0])
+
+
+def test_cache_prune_by_count_keeps_newest(tmp_path):
+    import os
+    cache, paths, _ = _seed_cache(tmp_path)
+    removed = cache.prune(max_entries=2)
+    assert removed == 3
+    assert len(cache) == 2
+    assert os.path.exists(paths[3]) and os.path.exists(paths[4])
+    assert not os.path.exists(paths[1])
+
+
+def test_cache_prune_policy_from_constructor(tmp_path):
+    cache, _, t0 = _seed_cache(tmp_path)
+    now = t0 + 4 * 86400 + 10
+    cache2 = ResultCache(cache.root, max_age_days=1, max_entries=1)
+    assert cache2.prune(now=now) == 4           # age evicts 0..3
+    assert cache2.prune(now=now) == 0           # nothing left to evict
+    cache.put(cache_key("x", DesignPoint().chip(), "dp", "analytic"),
+              {"cycles": 1.0})                  # fresh mtime
+    assert cache2.prune(now=now) == 1           # count cap kicks in
+    assert len(cache2) == 1
+
+
+def test_cache_prune_noop_without_limits(tmp_path):
+    cache, _, _ = _seed_cache(tmp_path)
+    assert cache.prune() == 0
+    assert len(cache) == 5
+
+
+# ---------------------------------------------------------------------------
+# CLI (python -m repro.explore)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_sweep_and_pareto(tmp_path, capsys):
+    from repro.explore.cli import main
+    store = str(tmp_path / "sweep.jsonl")
+    rc = main(["sweep", "tiny_cnn", "--res", "8", "--batch", "2",
+               "--mg", "4,8", "--flit", "8", "--strategies",
+               "generic,dp", "--no-cache", "--store", store])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "tiny_cnn" in out and "dp" in out
+    assert len(RecordStore(store)) == 4
+
+    rc = main(["pareto", store, "--axes", "cycles,energy"])
+    assert rc == 0
+    assert "frontier" in capsys.readouterr().out
+
+
+def test_cli_cache_prune_and_stats(tmp_path, capsys):
+    from repro.explore.cli import main
+    cache, _, _ = _seed_cache(tmp_path)
+    rc = main(["cache", "stats", "--cache-root", cache.root])
+    assert rc == 0
+    assert "5 entries" in capsys.readouterr().out
+    rc = main(["cache", "prune", "--cache-root", cache.root,
+               "--max-entries", "1"])
+    assert rc == 0
+    assert "pruned 4 entries" in capsys.readouterr().out
+    assert len(cache) == 1
+    with pytest.raises(SystemExit):
+        main(["cache", "prune", "--cache-root", cache.root])
+
+
+def test_engine_promotion_reuses_partition_pass(monkeypatch):
+    """Successive halving through the engine must hit the flow
+    pipeline's partition cache when promoting to the simulator."""
+    from repro import flow
+    from repro.flow import passes as flow_passes
+    flow.default_pipeline().clear_cache()
+    calls = []
+    orig = flow_passes._partition
+    monkeypatch.setattr(
+        flow_passes, "_partition",
+        lambda *a, **kw: (calls.append(a), orig(*a, **kw))[1])
+    eng = make_engine()          # serial, no result cache
+    successive_halving(eng, mg_flit_space((4,), (8,)), top_k=1)
+    # 1 point x (analytic screen + simulator promotion): the promotion
+    # must reuse the screen's partition, so exactly one computation
+    assert len(calls) == 1

@@ -1,0 +1,299 @@
+"""repro.flow pipeline: golden equivalence against the legacy
+partition+compile_model chain, pass-output caching across fidelities,
+backend parity, deprecation shims, and the strict_lmem warning."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import flow
+from repro.core import ref, workloads
+from repro.core.arch import default_chip
+from repro.core.codegen import CodegenError, compile_model
+from repro.core.graph import Graph
+from repro.core.mapping import CostParams
+from repro.core.partition import partition
+from repro.flow import (AnalyticBackend, CompileOptions, PartitionPass,
+                        Pipeline, register_pass)
+
+CHIP = default_chip(n_cores=8, mesh_cols=4)
+PARAMS = CostParams(batch=2)
+
+
+def _mlp() -> Graph:
+    g = Graph("mlp")
+    x = g.input("x", (64,))
+    h = g.linear("fc1", x, cout=48, act="relu")
+    g.linear("fc2", h, cout=10)
+    return g
+
+
+def _resnet_style() -> Graph:
+    """conv -> conv -> residual add -> relu -> GAP -> fc (ResNet idiom)."""
+    g = Graph("res_style")
+    x = g.input("x", (8, 8, 8))
+    c1 = g.conv("c1", x, cout=8, k=3, act="relu", use_bn=False)
+    c2 = g.conv("c2", c1, cout=8, k=3, use_bn=False)
+    a = g.eltwise("add", "add", c2, c1)
+    r = g.unary("relu", "relu", a)
+    g.linear("fc", g.globalpool("gap", r), cout=4)
+    return g
+
+
+def _isa_streams(model):
+    """Encoded per-core ISA words: [(stage, core, uint32-words), ...]."""
+    return [(si, cid, prog.encode(model.isa).tolist())
+            for si, st in enumerate(model.stages)
+            for cid, prog in sorted(st.programs.items())]
+
+
+def _legacy_model(cg, strategy="dp", batch=2):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = partition(cg, CHIP, strategy, PARAMS)
+        return compile_model(res, batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: new API == legacy chain, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build", [_mlp, _resnet_style],
+                         ids=["mlp", "resnet_style"])
+@pytest.mark.parametrize("strategy", ["dp", "generic"])
+def test_golden_isa_streams_bit_identical(build, strategy):
+    cg = build().condense()
+    legacy = _legacy_model(cg, strategy=strategy)
+    art = flow.compile(cg, CHIP, CompileOptions(
+        strategy=strategy, params=PARAMS, batch=2, fidelity="simulate"),
+        pipeline=Pipeline())
+    assert _isa_streams(art.model) == _isa_streams(legacy)
+    assert art.model.layout.weights == legacy.layout.weights
+    assert art.model.layout.acts == legacy.layout.acts
+
+
+def test_golden_simulated_cycles_match_legacy():
+    cg = _mlp().condense()
+    legacy = _legacy_model(cg)
+    from repro.core.simulator import Simulator
+    want = Simulator(CHIP, legacy.isa, mode="perf").run_model(legacy)
+    art = flow.compile(cg, CHIP, strategy="dp", params=PARAMS, batch=2,
+                       pipeline=Pipeline())
+    rep = art.evaluate("simulate")
+    assert rep.cycles == want.cycles
+    assert rep.sim.instrs == want.instrs
+
+
+def test_analytic_backend_matches_partition_result():
+    cg = _resnet_style().condense()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = partition(cg, CHIP, "dp", PARAMS)
+    art = flow.compile(cg, CHIP, strategy="dp", params=PARAMS,
+                       pipeline=Pipeline())
+    rep = art.evaluate(AnalyticBackend())
+    assert rep.cycles == pytest.approx(res.latency_cycles())
+    assert rep.batch == PARAMS.batch
+    # no codegen happened for the analytic fidelity
+    assert art.model is None
+
+
+# ---------------------------------------------------------------------------
+# pass-output caching across fidelities
+# ---------------------------------------------------------------------------
+
+
+def test_partition_pass_reused_across_fidelities():
+    pipe = Pipeline()
+    cg = _mlp().condense()
+    a1 = pipe.compile(cg, CHIP, CompileOptions(
+        strategy="dp", params=PARAMS, fidelity="analytic"))
+    r1 = a1.pass_record("partition")
+    assert r1 is not None and not r1.cached
+    # second fidelity: the partition pass must be skipped (cache hit)
+    a2 = pipe.compile(cg, CHIP, CompileOptions(
+        strategy="dp", params=PARAMS, fidelity="simulate"))
+    r2 = a2.pass_record("partition")
+    assert r2 is not None and r2.cached
+    assert a2.partition is a1.partition        # same object, no rework
+    assert a2.pass_record("condense").cached
+    assert not a2.pass_record("codegen").cached
+
+
+def test_cache_key_isolates_strategy_and_params():
+    pipe = Pipeline()
+    cg = _mlp().condense()
+    a_dp = pipe.compile(cg, CHIP, strategy="dp", params=PARAMS)
+    a_gen = pipe.compile(cg, CHIP, strategy="generic", params=PARAMS)
+    assert not a_gen.pass_record("partition").cached
+    assert a_gen.partition is not a_dp.partition
+    a_b4 = pipe.compile(cg, CHIP, strategy="dp",
+                        params=CostParams(batch=4))
+    assert not a_b4.pass_record("partition").cached
+
+
+def test_condense_cache_shared_across_chips():
+    """Condense is chip-independent: a second chip must reuse it while
+    re-running the (chip-dependent) partition pass."""
+    pipe = Pipeline()
+    cg = _mlp().condense()
+    other = default_chip(n_cores=4, mesh_cols=2)
+    pipe.compile(cg, CHIP, strategy="dp", params=PARAMS)
+    a2 = pipe.compile(cg, other, strategy="dp", params=PARAMS)
+    assert a2.pass_record("condense").cached
+    assert not a2.pass_record("partition").cached
+
+
+def test_dump_dir_writes_ir_even_on_cache_hit(tmp_path):
+    import os
+    pipe = Pipeline()
+    cg = _mlp().condense()
+    pipe.compile(cg, CHIP, strategy="dp", params=PARAMS)   # warm cache
+    d = str(tmp_path / "ir")
+    art = pipe.compile(cg, CHIP, strategy="dp", params=PARAMS,
+                       dump_dir=d)
+    assert art.pass_record("partition").cached
+    dumps = os.listdir(d)
+    assert any(f.startswith("condense-") for f in dumps)
+    assert any(f.startswith("partition_dp-") for f in dumps)
+
+
+def test_structurally_identical_graphs_share_cache():
+    pipe = Pipeline()
+    a1 = pipe.compile(_mlp().condense(), CHIP, strategy="dp",
+                      params=PARAMS)
+    a2 = pipe.compile(_mlp().condense(), CHIP, strategy="dp",
+                      params=PARAMS)
+    assert a2.pass_record("partition").cached
+    assert a2.partition is a1.partition
+
+
+def test_quant_and_strict_do_not_invalidate_partition():
+    pipe = Pipeline()
+    cg = _mlp().condense()
+    a1 = pipe.compile(cg, CHIP, strategy="dp", params=PARAMS)
+    a2 = pipe.compile(cg, CHIP, strategy="dp", params=PARAMS,
+                      strict_lmem=True, fidelity="simulate")
+    assert a2.pass_record("partition").cached
+    # but codegen does key on strict_lmem/quant
+    a3 = pipe.compile(cg, CHIP, strategy="dp", params=PARAMS,
+                      fidelity="simulate")
+    assert not a3.pass_record("codegen").cached
+
+
+# ---------------------------------------------------------------------------
+# registry pluggability
+# ---------------------------------------------------------------------------
+
+
+def test_custom_partition_strategy_plugs_in():
+    from repro.core.partition import greedy_partition
+    from repro.core.mapping import generic_mapping
+
+    def fn(cg, chip, params):
+        res = greedy_partition(cg, chip, params, generic_mapping,
+                               "custom-greedy")
+        return res
+
+    register_pass(PartitionPass("custom-greedy", fn=fn), replace=True)
+    art = flow.compile(_mlp().condense(), CHIP,
+                       strategy="custom-greedy", params=PARAMS,
+                       pipeline=Pipeline())
+    assert art.partition.strategy == "custom-greedy"
+    assert art.evaluate("analytic").cycles > 0
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError, match="no-such-strategy"):
+        flow.compile(_mlp().condense(), CHIP,
+                     strategy="no-such-strategy", pipeline=Pipeline())
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims + strict_lmem warning
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_partition_warns_but_works():
+    cg = _mlp().condense()
+    with pytest.warns(DeprecationWarning, match="repro.flow.compile"):
+        res = partition(cg, CHIP, "dp", PARAMS)
+    assert res.n_stages >= 1
+    with pytest.warns(DeprecationWarning, match="repro.flow.compile"):
+        model = compile_model(res, batch=1)
+    assert model.total_instrs > 0
+
+
+def test_perf_mode_lmem_overflow_warns():
+    """The silent strict_lmem footgun: perf mode must announce
+    out-of-bounds segments (one line, with segment + group id)."""
+    g = Graph("big")
+    x = g.input("x", (24, 24, 16))
+    g.conv("c1", x, cout=64, k=3, act="relu", use_bn=False)
+    cg = g.condense()
+    tiny = default_chip(n_cores=1, mesh_cols=1, local_mem_kb=16)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = partition(cg, tiny, "generic", CostParams(batch=1))
+        with pytest.warns(RuntimeWarning,
+                          match=r"lmem overflow: segment \d+.*group \d+"):
+            compile_model(res, batch=1)
+        # strict mode still raises instead
+        with pytest.raises(CodegenError, match="overflow"):
+            compile_model(res, batch=1, strict_lmem=True)
+
+
+# ---------------------------------------------------------------------------
+# options + func fidelity end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_options_validation():
+    from repro.core.codegen import QuantParams
+    with pytest.raises(ValueError, match="fidelity"):
+        CompileOptions(fidelity="nope")
+    with pytest.raises(ValueError, match="batch"):
+        CompileOptions(batch=0)
+    # quant normalizes to a sorted tuple: equal options hash equal
+    a = CompileOptions(quant={2: QuantParams(3, 8), 1: QuantParams()})
+    b = CompileOptions(quant={1: QuantParams(), 2: QuantParams(3, 8)})
+    assert a == b and hash(a) == hash(b)
+    assert a.subset_key(("quant",)) == b.subset_key(("quant",))
+    assert a.quant_dict()[2] == QuantParams(3, 8)
+
+
+def test_func_backend_matches_oracle():
+    g = workloads.tiny_cnn(res=8, c=8)
+    cg = g.condense()
+    rng = np.random.default_rng(1)
+    weights, biases = {}, {}
+    for grp in cg:
+        if grp.anchor is None:
+            continue
+        op = g.ops[grp.anchor]
+        if op.kind == "conv":
+            k = op.attrs["k"]
+            cin = g.ops[op.inputs[0]].out_shape[-1]
+            ker = rng.integers(-6, 7, (k, k, cin, op.gemm_n), np.int8)
+            weights[grp.idx] = ref.conv_weight_matrix(ker)
+        elif op.kind == "linear":
+            weights[grp.idx] = rng.integers(
+                -6, 7, (grp.gemm_k, grp.gemm_n), dtype=np.int8)
+        if any(g.ops[i].kind == "bias" for i in grp.op_ids):
+            biases[grp.idx] = rng.integers(-40, 40, grp.gemm_n,
+                                           np.int32)
+    inputs = rng.integers(-8, 8, (2, 8, 8, 3)).astype(np.int8)
+    qp = ref.auto_quant(cg, weights, biases, inputs)
+    art = flow.compile(cg, CHIP, strategy="dp", params=PARAMS, batch=2,
+                       quant=qp, strict_lmem=True, fidelity="func",
+                       pipeline=Pipeline())
+    img = art.build_gmem_image(weights, biases, inputs)
+    rep = art.evaluate(gmem_image=img)          # default backend: func
+    oracle = ref.run_reference(cg, weights, biases, qp, inputs)
+    last = len(cg) - 1
+    for s in range(2):
+        addr, nb = art.output_addr(last, s)
+        got = rep.sim.gmem[addr - 0x10000000: addr - 0x10000000 + nb]
+        np.testing.assert_array_equal(got, oracle[last][s].reshape(-1))
