@@ -3,15 +3,105 @@ the dry-run cache (``results/dryrun.json``).
 
 Reports the three terms in seconds, the dominant bottleneck,
 MODEL_FLOPS / HLO_FLOPs (useful-compute fraction), and per-chip memory.
+
+``--smoke`` runs a different job: a deterministic machine-model smoke
+table — analytic and trace cycles for the golden workloads on the
+default chip — printed in a fixed format, written to
+``results/roofline_smoke.json``, and **compared against the committed
+golden** (``benchmarks/roofline_smoke_golden.json``).  Any change to
+the shared machine model (:mod:`repro.core.machine`) that shifts
+reported cycles fails the CI job until the golden is regenerated with
+``--update-golden`` — i.e. cycle drift requires a reviewed diff.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 from typing import Dict, List, Optional
 
 DRYRUN = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+
+SMOKE_WORKLOADS = (
+    ("tiny_cnn", {}),
+    ("resnet18", {"res": 112}),
+)
+SMOKE_STRATEGIES = ("generic", "dp")
+SMOKE_GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "roofline_smoke_golden.json")
+
+
+def smoke_rows(batch: int = 4) -> List[Dict]:
+    from repro import flow
+    from repro.core.arch import default_chip
+    from repro.core.mapping import CostParams
+
+    chip = default_chip()
+    rows: List[Dict] = []
+    for model, kw in SMOKE_WORKLOADS:
+        for strategy in SMOKE_STRATEGIES:
+            art = flow.compile(
+                model, chip,
+                flow.CompileOptions(strategy=strategy,
+                                    params=CostParams(batch=batch),
+                                    workload_kw=kw or None))
+            analytic = art.evaluate("analytic")
+            trace = art.evaluate("trace")
+            rows.append({
+                "model": model, "kw": kw, "strategy": strategy,
+                "batch": batch,
+                "analytic_cycles": round(analytic.cycles, 1),
+                "trace_cycles": round(trace.cycles, 1),
+                "analytic_energy_nj": round(analytic.energy_total, 1),
+                "n_stages": art.partition.n_stages,
+            })
+    return rows
+
+
+def smoke_report(rows: List[Dict], out_json: Optional[str] = None) -> str:
+    from repro.core.arch import default_chip
+    out = ["== machine-model smoke (default chip) ==",
+           default_chip().machine().describe(),
+           f"{'model':16s} {'strategy':8s} {'stages':>6s} "
+           f"{'analytic':>14s} {'trace':>14s} {'trace/ana':>9s}"]
+    for r in rows:
+        ratio = r["trace_cycles"] / max(r["analytic_cycles"], 1e-9)
+        out.append(
+            f"{r['model']:16s} {r['strategy']:8s} {r['n_stages']:6d} "
+            f"{r['analytic_cycles']:14.0f} {r['trace_cycles']:14.0f} "
+            f"{ratio:9.2f}")
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        out.append(f"wrote {out_json}")
+    return "\n".join(out)
+
+
+def smoke_drift(rows: List[Dict],
+                golden_path: str = SMOKE_GOLDEN) -> List[str]:
+    """Mismatches against the committed golden table (empty = clean)."""
+    try:
+        with open(golden_path) as f:
+            golden = json.load(f)
+    except FileNotFoundError:
+        return [f"golden file {golden_path} missing "
+                f"(regenerate with --update-golden)"]
+    drift = []
+    key = lambda r: (r["model"], r["strategy"])  # noqa: E731
+    grows = {key(r): r for r in golden}
+    for r in rows:
+        g = grows.pop(key(r), None)
+        if g is None:
+            drift.append(f"{key(r)}: not in golden")
+            continue
+        for fld in ("analytic_cycles", "trace_cycles", "n_stages"):
+            if r[fld] != g[fld]:
+                drift.append(f"{key(r)}.{fld}: {g[fld]} -> {r[fld]}")
+    drift.extend(f"{k}: only in golden" for k in grows)
+    return drift
 
 
 def load(path: str = DRYRUN) -> Dict:
@@ -63,6 +153,34 @@ def report(mesh: str = "1pod") -> str:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="machine-model cycles smoke table (CI gate)")
+    ap.add_argument("--json", default="results/roofline_smoke.json",
+                    help="smoke output path ('' to skip writing)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="rewrite benchmarks/roofline_smoke_golden.json "
+                         "after an intentional machine-model change")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = smoke_rows()
+        print(smoke_report(rows, args.json or None))
+        if args.update_golden:
+            with open(SMOKE_GOLDEN, "w") as f:
+                json.dump(rows, f, indent=1, sort_keys=True)
+            print(f"golden updated: {SMOKE_GOLDEN}")
+            sys.exit(0)
+        drift = smoke_drift(rows)
+        if drift:
+            print("MACHINE-MODEL DRIFT vs committed golden:")
+            for d in drift:
+                print(f"  {d}")
+            print("if intentional, regenerate with "
+                  "`python -m benchmarks.roofline --smoke "
+                  "--update-golden` and commit the diff")
+            sys.exit(1)
+        print("golden: clean")
+        sys.exit(0)
     print(report("1pod"))
     print()
     print(report("2pod"))

@@ -10,6 +10,10 @@ cd "$(dirname "$0")/.."
 
 pip install -r requirements.txt \
     || echo "ci: pip install failed; assuming preinstalled deps" >&2
+# property-based modules importorskip on hypothesis — install it
+# explicitly so the 4 property tests run in CI instead of skipping
+pip install hypothesis \
+    || echo "ci: hypothesis install failed; property tests will skip" >&2
 
 set -e
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -19,5 +23,9 @@ python -m pytest -x -q
 
 echo "== benchmark smoke (analytic, no roofline) =="
 python -m benchmarks.run --quick --skip-roofline > /dev/null
+
+# the machine-model cycles gate (benchmarks/roofline.py --smoke) runs
+# as its own named CI job (machine-smoke in ci.yml) so a drift failure
+# is legible at a glance; run it here manually when iterating locally
 
 echo "ci: OK"

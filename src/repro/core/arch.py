@@ -156,10 +156,6 @@ class CimUnitConfig:
         """Total in-array weight storage of the unit."""
         return self.n_macro_groups * self.group_weight_bytes
 
-    def group_load_cycles(self) -> int:
-        """Cycles to (re)load all weights of one MG."""
-        return self.macro.rows // self.weight_load_rows_per_cycle
-
     def macs_per_pass(self) -> int:
         """MACs performed by one MG in one bit-serial pass."""
         return self.group_k * self.group_n_out
@@ -185,6 +181,7 @@ class ScalarUnitConfig:
     alu_latency: int = 1
     mul_latency: int = 3
     branch_penalty: int = 2
+    ldst_latency: int = 2      # local-memory scalar load/store
 
 
 @dataclass(frozen=True)
@@ -326,6 +323,14 @@ class ChipConfig:
         """Chip peak INT8 TOPS (2 ops per MAC)."""
         return (2 * self.peak_macs_per_cycle_per_core() * self.n_cores
                 * self.clock_ghz * 1e9 / 1e12)
+
+    # -- timing/energy rules -------------------------------------------------
+
+    def machine(self, calibration: Any = None):
+        """The chip's :class:`repro.core.machine.MachineModel` — the one
+        object every fidelity reads timing/bandwidth/energy rules from."""
+        from .machine import machine_for      # circular-import guard
+        return machine_for(self, calibration)
 
     # -- (de)serialization ---------------------------------------------------
 

@@ -1,0 +1,329 @@
+"""One machine-timing/energy model shared by every fidelity.
+
+Historically the analytic cost model (:mod:`repro.core.mapping`) and the
+cycle-accurate simulator (:mod:`repro.core.simulator`) each read raw
+``ChipConfig`` fields and re-derived latencies — bit-serial MVM beats,
+NoC link occupancy, global-memory stream rates, scalar/vector issue
+latencies — independently.  Any constant that drifted between the two
+silently invalidated the workflow's central premise: that decisions
+made against the cheap model hold on the expensive one.
+
+:class:`MachineModel` is now the *only* place a timing, bandwidth or
+energy rule is written down.  It is derived from a ``ChipConfig`` (the
+structural description stays in :mod:`repro.core.arch`) and consumed by
+
+* the analytic cost model (``core.mapping`` — stage intervals, load
+  cycles, energy-event pricing),
+* the cycle-accurate simulator (``core.simulator`` — per-instruction
+  unit latencies, wormhole link occupancy, gmem port streams),
+* the ``trace`` fidelity (``core.trace`` — StagePlan replay at
+  unit/transfer granularity),
+* benchmarks and reports (roofline anchors).
+
+A :class:`Calibration` attached to the model carries per-unit
+multiplicative correction factors fitted from a handful of simulator
+runs (:func:`repro.flow.calibrate`): the raw model stays analytic and
+chip-derived, while calibrated evaluations tighten the analytic and
+trace fidelities toward simulator truth — which is what makes
+cheap-fidelity *rankings* trustworthy in design-space exploration.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import lru_cache
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from .arch import ChipConfig
+from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
+
+__all__ = [
+    "Calibration", "IDENTITY_CALIBRATION", "MachineModel", "machine_for",
+    "VECTOR_SPECIAL_FNS", "VECTOR_MUL_FNS",
+]
+
+
+# Vector-unit latency classes, shared by the simulator's dispatch, the
+# trace replay and the analytic vector estimate.  ``special`` ops run
+# through the LUT pipeline (one issue per lanes-wide beat); ``mul`` ops
+# pay the multiplier latency; everything else is ALU-class.
+VECTOR_SPECIAL_FNS = frozenset(
+    {"sigmoid", "silu", "gelu", "tanh", "exp", "recip", "rsqrt",
+     "softmax"})
+VECTOR_MUL_FNS = frozenset({"mul", "mac", "muli", "quant", "dequant"})
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Per-unit multiplicative correction factors (1.0 = uncalibrated).
+
+    ``cim`` / ``vector`` / ``noc`` / ``gmem`` / ``load`` scale the
+    matching cycle components of the analytic and trace fidelities;
+    ``makespan`` is the residual serialization factor applied to a
+    stage's total latency after the per-unit terms — it absorbs
+    whole-sample handoff chains and in-order-issue stalls that no
+    per-unit busy model can see.
+    """
+
+    cim: float = 1.0
+    vector: float = 1.0
+    noc: float = 1.0
+    gmem: float = 1.0
+    load: float = 1.0
+    makespan: float = 1.0
+
+    def __post_init__(self) -> None:
+        for f in ("cim", "vector", "noc", "gmem", "load", "makespan"):
+            v = getattr(self, f)
+            if not (v > 0 and math.isfinite(v)):
+                raise ValueError(f"calibration factor {f} must be a "
+                                 f"positive finite number, got {v!r}")
+
+    @property
+    def is_identity(self) -> bool:
+        return self == IDENTITY_CALIBRATION
+
+    def scaled(self, **kw: float) -> "Calibration":
+        return replace(self, **kw)
+
+    def to_dict(self) -> Dict[str, float]:
+        return {"cim": self.cim, "vector": self.vector, "noc": self.noc,
+                "gmem": self.gmem, "load": self.load,
+                "makespan": self.makespan}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, float]) -> "Calibration":
+        return cls(**{k: float(v) for k, v in d.items()})
+
+    @classmethod
+    def combine(cls, calibs: "list[Calibration]") -> "Calibration":
+        """Geometric mean of several fits (e.g. one per candidate chip
+        of a sweep) — factors are ratios, so the geomean is the
+        bias-free aggregate."""
+        if not calibs:
+            return cls()
+        out = {}
+        for f in ("cim", "vector", "noc", "gmem", "load", "makespan"):
+            vals = [getattr(c, f) for c in calibs]
+            out[f] = math.exp(sum(math.log(v) for v in vals)
+                              / len(vals))
+        return cls(**out)
+
+    def describe(self) -> str:
+        return ("calibration(" +
+                ", ".join(f"{k}={v:.3g}"
+                          for k, v in self.to_dict().items()) + ")")
+
+
+IDENTITY_CALIBRATION = Calibration()
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    """Every timing/bandwidth/energy rule of one chip, in one object.
+
+    Frozen and hashable — safe to share across threads and cheap enough
+    to construct per candidate chip in an arch sweep (all accessors are
+    O(1) arithmetic over ``ChipConfig`` fields).  Use
+    :func:`machine_for` to get the memoized instance.
+    """
+
+    chip: ChipConfig
+    calib: Calibration = IDENTITY_CALIBRATION
+    energy_table: EnergyTable = DEFAULT_TABLE
+
+    # ------------------------------------------------------------------
+    # CIM unit
+    # ------------------------------------------------------------------
+
+    @property
+    def mvm_interval_beats(self) -> int:
+        """Pipelined pass interval: one beat per activation bit."""
+        return self.chip.core.cim.macro.act_bits
+
+    @property
+    def mvm_fill_beats(self) -> int:
+        """Adder-tree fill latency paid once per MVM burst."""
+        return self.chip.core.cim.macro.adder_tree_depth
+
+    @property
+    def mvm_pass_beats(self) -> int:
+        """One full bit-serial pass: interval + tree fill."""
+        return self.mvm_interval_beats + self.mvm_fill_beats
+
+    def mvm_cycles(self, rep: int) -> float:
+        """A CIM_MVM burst of ``rep`` input vectors."""
+        return rep * self.mvm_interval_beats + self.mvm_fill_beats
+
+    def weight_load_cycles(self, rows: int) -> float:
+        """CIM_LOAD of ``rows`` macro rows from local memory."""
+        return rows / self.chip.core.cim.weight_load_rows_per_cycle
+
+    def group_load_cycles(self) -> float:
+        """(Re)load of one full macro group."""
+        return self.weight_load_cycles(self.chip.core.cim.macro.rows)
+
+    @property
+    def macros_per_group(self) -> int:
+        return self.chip.core.cim.macros_per_group
+
+    # ------------------------------------------------------------------
+    # Vector unit
+    # ------------------------------------------------------------------
+
+    @property
+    def vector_lanes(self) -> int:
+        return self.chip.core.vector.lanes
+
+    def vector_cycles(self, fn: str, n: int) -> float:
+        """One vector instruction over ``n`` elements (fn = op name
+        without the ``V_`` prefix, lower-case)."""
+        v = self.chip.core.vector
+        beats = math.ceil(max(n, 1) / v.lanes)
+        if fn in VECTOR_SPECIAL_FNS:
+            return beats * v.special_latency
+        if fn in VECTOR_MUL_FNS:
+            return beats + v.mul_latency
+        return beats + v.alu_latency
+
+    # ------------------------------------------------------------------
+    # Scalar unit
+    # ------------------------------------------------------------------
+
+    @property
+    def scalar_alu_cycles(self) -> int:
+        return self.chip.core.scalar.alu_latency
+
+    @property
+    def scalar_mul_cycles(self) -> int:
+        return self.chip.core.scalar.mul_latency
+
+    @property
+    def scalar_ldst_cycles(self) -> int:
+        return self.chip.core.scalar.ldst_latency
+
+    def branch_cycles(self, taken: bool) -> int:
+        s = self.chip.core.scalar
+        return 1 + (s.branch_penalty if taken else 0)
+
+    # ------------------------------------------------------------------
+    # NoC
+    # ------------------------------------------------------------------
+
+    @property
+    def link_bytes_per_cycle(self) -> int:
+        return self.chip.noc.link_bytes_per_cycle
+
+    @property
+    def router_hop_cycles(self) -> int:
+        return self.chip.noc.router_latency
+
+    @property
+    def inject_cycles(self) -> int:
+        return self.chip.noc.inject_latency
+
+    def link_occupancy_cycles(self, nbytes: int) -> float:
+        """Cycles a wormhole flit stream occupies one directed link."""
+        noc = self.chip.noc
+        flits = max(1, math.ceil(nbytes / noc.flit_bytes))
+        return flits / noc.flits_per_cycle
+
+    def send_issue_cycles(self, nbytes: int) -> float:
+        """Sender-side NoC-unit occupancy to inject a message."""
+        return max(1.0, nbytes / self.link_bytes_per_cycle)
+
+    @property
+    def avg_hops(self) -> float:
+        """Expected Manhattan distance between two uniform-random mesh
+        cores: (rows + cols) / 3."""
+        return (self.chip.mesh_rows + self.chip.mesh_cols) / 3.0
+
+    def hops(self, src: int, dst: int) -> int:
+        return self.chip.hops(src, dst)
+
+    def route(self, src: int, dst: int) -> List[Tuple[int, int]]:
+        return self.chip.route(src, dst)
+
+    def noc_transfer_cycles(self, nbytes: int,
+                            hops: Optional[float] = None) -> float:
+        """Uncontended end-to-end transfer estimate."""
+        h = self.avg_hops if hops is None else hops
+        return (self.inject_cycles + h * self.router_hop_cycles
+                + self.link_occupancy_cycles(nbytes))
+
+    # ------------------------------------------------------------------
+    # Global memory
+    # ------------------------------------------------------------------
+
+    @property
+    def gmem_ports(self) -> int:
+        return self.chip.global_mem_ports
+
+    @property
+    def gmem_port_bytes_per_cycle(self) -> int:
+        return self.chip.global_mem_bytes_per_cycle
+
+    @property
+    def gmem_total_bytes_per_cycle(self) -> int:
+        return self.gmem_ports * self.gmem_port_bytes_per_cycle
+
+    def gmem_stream_cycles(self, nbytes: float,
+                           ports: Optional[int] = None) -> float:
+        """Stream ``nbytes`` over ``ports`` concurrent gmem ports."""
+        n = self.gmem_ports if ports is None else max(1, min(
+            ports, self.gmem_ports))
+        return nbytes / (n * self.gmem_port_bytes_per_cycle)
+
+    # ------------------------------------------------------------------
+    # Energy event pricing
+    # ------------------------------------------------------------------
+
+    def price_events(self, events: Mapping[str, float]) -> Dict[str, float]:
+        """Event ledger -> {category: nJ} breakdown (+ ``total``)."""
+        return energy_breakdown(events, self.energy_table)
+
+    # ------------------------------------------------------------------
+    # Derived peaks (roofline anchors)
+    # ------------------------------------------------------------------
+
+    def peak_macs_per_cycle_per_core(self) -> float:
+        return self.chip.peak_macs_per_cycle_per_core()
+
+    # ------------------------------------------------------------------
+    # Calibration plumbing
+    # ------------------------------------------------------------------
+
+    def with_calibration(self, calib: Optional[Calibration]
+                         ) -> "MachineModel":
+        return machine_for(self.chip, calib)
+
+    def describe(self) -> str:
+        lines = [
+            f"machine '{self.chip.name}': mvm {self.mvm_interval_beats}"
+            f"+{self.mvm_fill_beats} beats, MG load "
+            f"{self.group_load_cycles():.0f} cyc, vector "
+            f"{self.vector_lanes} lanes, link "
+            f"{self.link_bytes_per_cycle} B/cyc "
+            f"({self.router_hop_cycles} cyc/hop), gmem "
+            f"{self.gmem_ports}x{self.gmem_port_bytes_per_cycle} B/cyc",
+        ]
+        if not self.calib.is_identity:
+            lines.append(f"  {self.calib.describe()}")
+        return "\n".join(lines)
+
+
+@lru_cache(maxsize=512)
+def _machine_for(chip: ChipConfig, calib: Calibration) -> MachineModel:
+    return MachineModel(chip=chip, calib=calib)
+
+
+def machine_for(chip: ChipConfig,
+                calib: Optional[Calibration] = None) -> MachineModel:
+    """The memoized machine model of a chip (+ optional calibration).
+
+    ``ChipConfig`` and ``Calibration`` are frozen, so identical
+    descriptions share one instance — arch sweeps construct thousands
+    of models for free.
+    """
+    return _machine_for(chip, calib or IDENTITY_CALIBRATION)

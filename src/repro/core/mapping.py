@@ -39,6 +39,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .arch import ChipConfig
 from .graph import CondensedGraph, Group
+from .machine import Calibration, MachineModel, machine_for
 
 __all__ = [
     "CostParams", "GroupAlloc", "StagePlan", "mg_tiles", "min_cores",
@@ -150,6 +151,7 @@ class GroupAlloc:
     compute: float = 0.0
     vector: float = 0.0
     comm: float = 0.0
+    comm_gmem: float = 0.0     # gmem share of ``comm`` (boundary streams)
     fill_frac: float = 1.0     # chunked-pipelining fill fraction
     load_bytes: int = 0        # weight bytes fetched at stage start (x dup)
 
@@ -157,18 +159,39 @@ class GroupAlloc:
     def total_cores(self) -> int:
         return self.cores * self.dup
 
+    def components(self, calib: Optional[Calibration] = None
+                   ) -> Tuple[float, float, float]:
+        """(compute, vector, comm) per-sample cycles, optionally scaled
+        by per-unit calibration factors (``comm`` splits into its gmem
+        and NoC shares so each takes its own factor)."""
+        if calib is None or calib.is_identity:
+            return self.compute, self.vector, self.comm
+        noc_part = self.comm - self.comm_gmem
+        return (self.compute * calib.cim,
+                self.vector * calib.vector,
+                self.comm_gmem * calib.gmem + noc_part * calib.noc)
+
+    def interval_c(self, calib: Optional[Calibration] = None) -> float:
+        return max(self.components(calib))
+
+    def latency_c(self, calib: Optional[Calibration] = None) -> float:
+        return sum(self.components(calib))
+
+    def fill_c(self, calib: Optional[Calibration] = None) -> float:
+        return self.latency_c(calib) * self.fill_frac
+
     @property
     def interval(self) -> float:
-        return max(self.compute, self.vector, self.comm)
+        return self.interval_c()
 
     @property
     def latency(self) -> float:
-        return self.compute + self.vector + self.comm
+        return self.latency_c()
 
     @property
     def fill(self) -> float:
         """Pipeline-fill contribution (row-chunk streaming)."""
-        return self.latency * self.fill_frac
+        return self.fill_c()
 
 
 @dataclass
@@ -185,22 +208,26 @@ class StagePlan:
     # -- derived costs -------------------------------------------------------
 
     @property
+    def machine(self) -> MachineModel:
+        """The shared timing/energy model (uncalibrated; calibration is
+        applied per evaluation via the ``calib`` arguments)."""
+        return machine_for(self.chip)
+
+    @property
     def cores_used(self) -> int:
         return min(self.chip.n_cores,
                    sum(a.total_cores for a in self.allocs))
 
-    @property
-    def interval(self) -> float:
+    def interval_c(self, calib: Optional[Calibration] = None) -> float:
         """Steady-state cycles per sample."""
         if self.shared_cores:
             # groups serialize on shared cores: intervals add, scaled by
             # how over-subscribed the chip is.
-            tot = sum(a.interval for a in self.allocs)
-            return tot
-        return max((a.interval for a in self.allocs), default=0.0)
+            return sum(a.interval_c(calib) for a in self.allocs)
+        return max((a.interval_c(calib) for a in self.allocs),
+                   default=0.0)
 
-    @property
-    def fill(self) -> float:
+    def fill_cycles(self, calib: Optional[Calibration] = None) -> float:
         """Latency of the first sample through the stage pipeline.
 
         Groups stream row-chunks to their successors, so spatial groups
@@ -209,44 +236,61 @@ class StagePlan:
         """
         if not self.allocs:
             return 0.0
-        return (sum(a.fill for a in self.allocs[:-1])
-                + self.allocs[-1].latency)
+        return (sum(a.fill_c(calib) for a in self.allocs[:-1])
+                + self.allocs[-1].latency_c(calib))
 
-    @property
-    def load_cycles(self) -> float:
+    def load_cycles_c(self, calib: Optional[Calibration] = None) -> float:
         """Weight (re)load at stage start (gmem stream + array write)."""
-        chip = self.chip
+        m = self.machine
         total_bytes = sum(a.load_bytes for a in self.allocs)
-        gmem = total_bytes / (chip.global_mem_ports
-                              * chip.global_mem_bytes_per_cycle)
+        gmem = m.gmem_stream_cycles(total_bytes)
         # array row writes happen in parallel across cores
-        cim = chip.core.cim
         per_core_tiles = max(
             (math.ceil(a.tiles / max(a.cores, 1)) * a.rounds
              for a in self.allocs), default=0)
-        write = per_core_tiles * cim.group_load_cycles()
-        return max(gmem, write)
+        write = per_core_tiles * m.group_load_cycles()
+        cycles = max(gmem, write)
+        return cycles * calib.load if calib is not None else cycles
 
-    def latency_cycles(self, batch: Optional[int] = None) -> float:
+    @property
+    def interval(self) -> float:
+        return self.interval_c()
+
+    @property
+    def fill(self) -> float:
+        return self.fill_cycles()
+
+    @property
+    def load_cycles(self) -> float:
+        return self.load_cycles_c()
+
+    def latency_cycles(self, batch: Optional[int] = None,
+                       calib: Optional[Calibration] = None) -> float:
         b = batch if batch is not None else self.params.batch
-        return self.load_cycles + self.fill + max(0, b - 1) * self.interval
+        cycles = (self.load_cycles_c(calib) + self.fill_cycles(calib)
+                  + max(0, b - 1) * self.interval_c(calib))
+        if calib is not None:
+            cycles *= calib.makespan
+        return cycles
 
     # -- energy event ledger (consumed by core.energy) ------------------------
 
-    def energy_events(self, batch: Optional[int] = None) -> Dict[str, float]:
+    def energy_events(self, batch: Optional[int] = None,
+                      calib: Optional[Calibration] = None
+                      ) -> Dict[str, float]:
         b = batch if batch is not None else self.params.batch
         chip = self.chip
+        m = self.machine
         ev: Dict[str, float] = {
             "cim_macro_passes": 0.0, "cim_weight_load_bytes": 0.0,
             "vector_elems": 0.0, "noc_byte_hops": 0.0,
             "gmem_bytes": 0.0, "lmem_bytes": 0.0,
         }
-        cim = chip.core.cim
-        avg_hops = (chip.mesh_rows + chip.mesh_cols) / 3.0
+        avg_hops = m.avg_hops
         for a in self.allocs:
             g = self._group(a.gid)
             # one pass activates `tiles` MGs = tiles*macros_per_group macros
-            passes = g.gemm_m * b * a.tiles * cim.macros_per_group
+            passes = g.gemm_m * b * a.tiles * m.macros_per_group
             ev["cim_macro_passes"] += passes
             ev["cim_weight_load_bytes"] += a.load_bytes
             ev["vector_elems"] += g.vector_elems * b
@@ -264,7 +308,8 @@ class StagePlan:
             g = self._group(a.gid)
             if not any(s in member for s in self._consumers(g)):
                 ev["gmem_bytes"] += g.out_bytes * b
-        ev["static_core_cycles"] = self.latency_cycles(b) * chip.n_cores
+        ev["static_core_cycles"] = (self.latency_cycles(b, calib)
+                                    * chip.n_cores)
         return ev
 
     # -- plumbing -------------------------------------------------------------
@@ -302,6 +347,7 @@ class StagePlan:
 def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
                  dup: int, boundary_in: bool) -> GroupAlloc:
     cim = chip.core.cim
+    m = machine_for(chip)
     tiles = mg_tiles(g, chip)
     chip_tiles = chip.n_cores * cim.n_macro_groups
     eff_tiles = min(tiles, chip_tiles)
@@ -315,14 +361,11 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
         slots_needed = 0
         rounds = 1
 
-    beats = cim.macro.mvm_beats()
-    interval_beats = cim.macro.act_bits          # pipelined pass interval
     m_per_rep = math.ceil(g.gemm_m / dup) if g.gemm_m else 0
-    compute = (m_per_rep * interval_beats * rounds
-               + (beats - interval_beats)) if g.is_mvm else 0.0
+    compute = (m_per_rep * m.mvm_interval_beats * rounds
+               + m.mvm_fill_beats) if g.is_mvm else 0.0
 
-    lanes = chip.core.vector.lanes
-    vector = g.vector_elems / (lanes * max(cores, 1)) / dup if \
+    vector = g.vector_elems / (m.vector_lanes * max(cores, 1)) / dup if \
         g.vector_elems else 0.0
 
     # Input delivery.  Replicas own disjoint spatial/batch slices: each
@@ -331,22 +374,23 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
     # communication side of the paper's duplicate-vs-communicate trade-off.
     halo = params.dup_halo if (g.gemm_m > 1 and dup > 1) else 0.0
     in_traffic = g.in_bytes * (1 + halo * (dup - 1) / dup)
+    comm_gmem = 0.0
     if boundary_in:
-        bw = chip.global_mem_ports * chip.global_mem_bytes_per_cycle
-        comm = in_traffic / bw          # gmem streams are a shared resource
+        # gmem streams are a shared resource
+        comm_gmem = m.gmem_stream_cycles(in_traffic)
+        comm = comm_gmem
     else:
-        bw = chip.noc.link_bytes_per_cycle
-        comm = in_traffic / (bw * dup)
-        comm += chip.noc.router_latency * (chip.mesh_rows + chip.mesh_cols) / 3
+        comm = in_traffic / (m.link_bytes_per_cycle * dup)
+        comm += m.router_hop_cycles * m.avg_hops
     # output delivery to the next group / gmem, likewise port-parallel
-    comm += g.out_bytes / (chip.noc.link_bytes_per_cycle * dup)
+    comm += g.out_bytes / (m.link_bytes_per_cycle * dup)
 
     fill_frac = params.pipeline_fill_frac if g.gemm_m > 4 else 1.0
     return GroupAlloc(
         gid=g.idx, tiles=eff_tiles, cores=cores, dup=dup, rounds=rounds,
         percore_slots=min(slots_needed, cim.n_macro_groups),
         boundary_in=boundary_in, compute=float(compute), vector=float(vector),
-        comm=float(comm), fill_frac=fill_frac,
+        comm=float(comm), comm_gmem=float(comm_gmem), fill_frac=fill_frac,
         # every replica fetches the full weights once per stage execution
         # (oversized groups stream them in rounds, same total bytes)
         load_bytes=g.weight_bytes * dup)

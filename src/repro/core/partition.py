@@ -57,8 +57,9 @@ class PartitionResult:
     chip: ChipConfig
     params: CostParams
 
-    def latency_cycles(self, batch: Optional[int] = None) -> float:
-        return sum(s.latency_cycles(batch) for s in self.stages)
+    def latency_cycles(self, batch: Optional[int] = None,
+                       calib=None) -> float:
+        return sum(s.latency_cycles(batch, calib) for s in self.stages)
 
     def latency_s(self, batch: Optional[int] = None) -> float:
         return self.latency_cycles(batch) / (self.chip.clock_ghz * 1e9)
@@ -67,10 +68,11 @@ class PartitionResult:
         b = batch if batch is not None else self.params.batch
         return b / self.latency_s(b)
 
-    def energy_events(self, batch: Optional[int] = None) -> Dict[str, float]:
+    def energy_events(self, batch: Optional[int] = None,
+                      calib=None) -> Dict[str, float]:
         tot: Dict[str, float] = {}
         for s in self.stages:
-            for k, v in s.energy_events(batch).items():
+            for k, v in s.energy_events(batch, calib).items():
                 tot[k] = tot.get(k, 0.0) + v
         return tot
 

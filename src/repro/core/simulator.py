@@ -28,7 +28,6 @@ partitioner optimizes for.
 
 from __future__ import annotations
 
-import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -39,6 +38,7 @@ from .arch import ChipConfig
 from .codegen import GMEM_BASE, CompiledModel, StageProgram
 from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
 from .isa import FLAGS, Instr, Isa, Program, SREG, VFUNCT
+from .machine import MachineModel, machine_for
 
 __all__ = ["Simulator", "SimReport", "SimError"]
 
@@ -59,9 +59,12 @@ class SimReport:
     unit_busy: Dict[str, float]           # unit -> total busy cycles
     instrs: int
     gmem: Optional[np.ndarray] = None     # functional mode: final image
+    # pricing table the machine model attached (shared across fidelities)
+    table: EnergyTable = DEFAULT_TABLE
 
-    def energy(self, table: EnergyTable = DEFAULT_TABLE) -> Dict[str, float]:
-        return energy_breakdown(self.events, table)
+    def energy(self, table: Optional[EnergyTable] = None
+               ) -> Dict[str, float]:
+        return energy_breakdown(self.events, table or self.table)
 
     def utilization(self, chip: ChipConfig) -> Dict[str, float]:
         denom = self.cycles * chip.n_cores
@@ -124,6 +127,9 @@ class Simulator:
         if mode not in ("perf", "func"):
             raise ValueError(mode)
         self.chip = chip
+        # the one source of timing/bandwidth/energy rules — shared with
+        # the analytic cost model and the trace fidelity
+        self.m: MachineModel = machine_for(chip)
         self.isa = isa
         self.func = mode == "func"
         self.max_cycles = max_cycles
@@ -155,7 +161,7 @@ class Simulator:
         events["static_core_cycles"] = total * self.chip.n_cores
         return SimReport(cycles=total, stage_cycles=stage_cycles,
                          events=events, unit_busy=busy, instrs=instrs,
-                         gmem=gmem)
+                         gmem=gmem, table=self.m.energy_table)
 
     # -- stage loop --------------------------------------------------------------
 
@@ -169,7 +175,7 @@ class Simulator:
         self._instrs = 0
         # NoC / gmem shared state
         self._links: Dict[Tuple[int, int], float] = {}
-        self._ports = [0.0] * chip.global_mem_ports
+        self._ports = [0.0] * self.m.gmem_ports
         self._chan: Dict[Tuple[int, int], deque] = {}
         self._barriers: Dict[int, List[_Core]] = {}
 
@@ -208,25 +214,22 @@ class Simulator:
     def _route_delay(self, src: int, dst: int, nbytes: int,
                      t_start: float) -> float:
         """Wormhole transfer: reserve each link on the XY route."""
-        chip = self.chip
-        noc = chip.noc
-        flits = max(1, math.ceil(nbytes / noc.flit_bytes))
-        occupy = flits / noc.flits_per_cycle
-        t = t_start + noc.inject_latency
+        m = self.m
+        occupy = m.link_occupancy_cycles(nbytes)
+        t = t_start + m.inject_cycles
         if src == dst:
             return t + occupy
-        for link in chip.route(src, dst):
-            t = max(t, self._links.get(link, 0.0)) + noc.router_latency
+        for link in m.route(src, dst):
+            t = max(t, self._links.get(link, 0.0)) + m.router_hop_cycles
             self._links[link] = t + occupy
-        self._ev("noc_byte_hops", nbytes * chip.hops(src, dst))
+        self._ev("noc_byte_hops", nbytes * m.hops(src, dst))
         return t + occupy
 
     def _gmem_xfer(self, nbytes: int, t_start: float) -> float:
         """Pick earliest-free gmem port."""
-        bw = self.chip.global_mem_bytes_per_cycle
         i = min(range(len(self._ports)), key=lambda j: self._ports[j])
         t0 = max(t_start, self._ports[i])
-        t1 = t0 + nbytes / bw
+        t1 = t0 + self.m.gmem_stream_cycles(nbytes, ports=1)
         self._ports[i] = t1
         self._ev("gmem_bytes", nbytes)
         return t1
@@ -256,18 +259,17 @@ class Simulator:
 
         # ---- scalar / control -------------------------------------------------
         if name == "S_ADDI":
-            self._use(core, "scalar", self.chip.core.scalar.alu_latency)
+            self._use(core, "scalar", self.m.scalar_alu_cycles)
             if a["dst"]:
                 G[a["dst"]] = G[a["a"]] + a["imm"]
         elif name == "S_LUI":
-            self._use(core, "scalar", self.chip.core.scalar.alu_latency)
+            self._use(core, "scalar", self.m.scalar_alu_cycles)
             if a["dst"]:
                 G[a["dst"]] = (a["imm"] & 0xFFFF) << 16
         elif name.startswith("S_") and name not in ("S_LD", "S_ST"):
             self._use(core, "scalar",
-                      self.chip.core.scalar.mul_latency
-                      if name == "S_MUL" else
-                      self.chip.core.scalar.alu_latency)
+                      self.m.scalar_mul_cycles if name == "S_MUL"
+                      else self.m.scalar_alu_cycles)
             if a.get("dst"):
                 x, y = int(G[a["a"]]), int(G[a["b"]])
                 G[a["dst"]] = {
@@ -277,7 +279,7 @@ class Simulator:
                     "S_SRL": (x & 0xFFFFFFFF) >> (y & 31),
                 }[name]
         elif name in ("S_LD", "S_ST"):
-            self._use(core, "scalar", 2)
+            self._use(core, "scalar", self.m.scalar_ldst_cycles)
             if self.func:
                 addr = int(G[a["base"]]) + a["off"]
                 lm32 = core.lmem.view(np.int32)
@@ -289,15 +291,12 @@ class Simulator:
         elif name in ("BEQ", "BNE", "BLT"):
             x, y = int(G[a["a"]]), int(G[a["b"]])
             taken = {"BEQ": x == y, "BNE": x != y, "BLT": x < y}[name]
-            self._use(core, "scalar",
-                      1 + (self.chip.core.scalar.branch_penalty
-                           if taken else 0))
+            self._use(core, "scalar", self.m.branch_cycles(taken))
             if taken:
                 core.pc += a["off"]
                 return
         elif name == "JAL":
-            self._use(core, "scalar",
-                      1 + self.chip.core.scalar.branch_penalty)
+            self._use(core, "scalar", self.m.branch_cycles(True))
             G[31] = core.pc + 1
             core.pc += a["off"]
             return
@@ -312,11 +311,9 @@ class Simulator:
 
         # ---- CIM compute ------------------------------------------------------------
         elif name == "CIM_LOAD":
-            cim = self.chip.core.cim
             rows = a["rows"]
             n_len = core.sreg("MG_NLEN")
-            lat = rows / cim.weight_load_rows_per_cycle
-            self._use(core, "cim", lat)
+            self._use(core, "cim", self.m.weight_load_cycles(rows))
             self._ev("cim_weight_load_bytes", rows * max(n_len, 1))
             self._ev("lmem_bytes", rows * max(n_len, 1))
             w = None
@@ -328,18 +325,15 @@ class Simulator:
                 w=w, rows=rows, n_len=n_len,
                 k_off=core.sreg("MG_KOFF"), n_off=core.sreg("MG_NOFF"))
         elif name == "CIM_MVM":
-            cim = self.chip.core.cim
             rep = a["rep"]
             mask = (core.sreg("MG_MASK_LO") & 0xFFFF) \
                 | (core.sreg("MG_MASK_HI") << 16)
             active = [core.mgs[i] for i in core.mgs if mask & (1 << i)]
-            beats = cim.macro.act_bits
-            lat = rep * beats + cim.macro.adder_tree_depth
-            self._use(core, "cim", lat)
+            self._use(core, "cim", self.m.mvm_cycles(rep))
             seg_in = core.sreg("MVM_SEG_IN")
             seg_out = core.sreg("MVM_SEG_OUT")
             self._ev("cim_macro_passes",
-                     rep * len(active) * cim.macros_per_group)
+                     rep * len(active) * self.m.macros_per_group)
             self._ev("lmem_bytes", rep * (seg_in + seg_out))
             if self.func and active:
                 src, dst = int(G[a["src"]]), int(G[a["dst"]])
@@ -367,9 +361,7 @@ class Simulator:
             src = int(G[a["src"]])
             size = int(G[a["size"]])
             stream = core.sreg("CHANNEL")
-            noc = self.chip.noc
-            inject = max(1.0, size / noc.link_bytes_per_cycle)
-            done = self._use(core, "noc", inject)
+            done = self._use(core, "noc", self.m.send_issue_cycles(size))
             arrival = self._route_delay(core.id, dst_core, size, done)
             data = None
             if self.func:
@@ -393,15 +385,13 @@ class Simulator:
                     f"recv size mismatch {src_core}->{core.id}"
                     f"#{stream}: expected {size}, got {msize}")
             self._sync(core, arrival)
-            self._use(core, "noc",
-                      max(1.0, size / self.chip.noc.link_bytes_per_cycle))
+            self._use(core, "noc", self.m.send_issue_cycles(size))
             if self.func:
                 core.lmem[dst:dst + size] = data
             self._ev("lmem_bytes", size)
         elif name == "BCAST":
             size = int(G[a["size"]])
-            self._use(core, "noc",
-                      max(1.0, size / self.chip.noc.link_bytes_per_cycle))
+            self._use(core, "noc", self.m.send_issue_cycles(size))
         elif name == "SYNC":
             bid = a["barrier"]
             group = self._barriers.setdefault(bid, [])
@@ -456,18 +446,10 @@ class Simulator:
             core.sregs[SREG["VLEN"]] = ins.args["len"]
             return
         fn = name[2:].lower()
-        vcfg = self.chip.core.vector
         vlen = max(1, core.sreg("VLEN"))
         rep = max(1, core.sreg("V_REP"))
         n = vlen * rep
-        if fn in ("sigmoid", "silu", "gelu", "tanh", "exp", "recip",
-                  "rsqrt", "softmax"):
-            lat = math.ceil(n / vcfg.lanes) * vcfg.special_latency
-        elif fn in ("mul", "mac", "muli", "quant", "dequant"):
-            lat = math.ceil(n / vcfg.lanes) + vcfg.mul_latency
-        else:
-            lat = math.ceil(n / vcfg.lanes) + vcfg.alu_latency
-        self._use(core, "vector", lat)
+        self._use(core, "vector", self.m.vector_cycles(fn, n))
         self._ev("vector_elems", n)
         flags = ins.args.get("flags", 0)
         i8 = bool(flags & FLAGS["i8"])

@@ -20,6 +20,7 @@ Quickstart::
     front = pareto_frontier(screened, axes=("cycles", "energy"))
 """
 
+from ..core.machine import Calibration
 from . import cache, cli, engine, pareto, records, search, space
 from .cache import ResultCache, cache_key, default_cache_dir
 from .engine import ExplorationEngine, evaluate_chip
@@ -35,7 +36,7 @@ from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
 __all__ = [
     "cache", "cli", "engine", "pareto", "records", "search", "space",
     "ResultCache", "cache_key", "default_cache_dir",
-    "ExplorationEngine", "evaluate_chip",
+    "ExplorationEngine", "evaluate_chip", "Calibration",
     "AXES", "ParetoPoint", "annotate", "frontier_report",
     "pareto_frontier",
     "FIDELITIES", "EvalRecord", "RecordStore",

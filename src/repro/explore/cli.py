@@ -74,10 +74,10 @@ def _build_space(args: argparse.Namespace) -> DesignSpace:
 
 
 def _cmd_sweep(args: argparse.Namespace) -> int:
-    if args.top_k and args.fidelity != "analytic":
+    if args.top_k and args.fidelity == "simulate":
         raise SystemExit(
             "--top-k implies the two-fidelity successive-halving flow "
-            "(analytic screen, simulator promotion); it cannot be "
+            "(cheap screen, simulator promotion); it cannot be "
             "combined with --fidelity simulate")
     space = _build_space(args)
     kw = {}
@@ -88,12 +88,14 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
         pool=args.pool,
         cache=None if args.no_cache else (args.cache_root
                                           or default_cache_dir()),
-        store=args.store, **kw)
+        store=args.store, flow_cache=args.flow_cache, **kw)
     print(f"sweeping {args.model}: {space.describe()}")
     if args.top_k:
-        result, screened = successive_halving(eng, space,
-                                              top_k=args.top_k,
-                                              objective=by_edp)
+        result, screened = successive_halving(
+            eng, space, top_k=args.top_k, objective=by_edp,
+            screen_fidelity=args.fidelity, calibrate=args.calibrate)
+        if eng.calibration is not None:
+            print(eng.calibration.describe())
         print(_row_table(screened))
         print(f"\ntop-{args.top_k} promoted to the simulator:")
         print(_row_table(result.history))
@@ -162,14 +164,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="[mg-flit only] comma-separated flit widths "
                          "(default 8,16)")
     sw.add_argument("--strategies", default=",".join(STRATEGIES))
-    sw.add_argument("--fidelity", choices=("analytic", "simulate"),
+    sw.add_argument("--fidelity",
+                    choices=("analytic", "trace", "simulate"),
                     default="analytic",
-                    help="single-fidelity sweeps only (exclusive "
-                         "with --top-k)")
+                    help="sweep fidelity; with --top-k this is the "
+                         "screening rung (simulate is then invalid)")
     sw.add_argument("--top-k", type=int, default=0,
-                    help="successive halving: analytic screen, then "
+                    help="successive halving: cheap screen, then "
                          "promote the top-K to the simulator "
                          "(exclusive with --fidelity simulate)")
+    sw.add_argument("--calibrate", type=int, default=0,
+                    help="[with --top-k] fit per-unit correction "
+                         "factors from N simulator runs before the "
+                         "deciding screen")
+    sw.add_argument("--flow-cache", default=None,
+                    help="directory for the persistent flow "
+                         "pass-output cache (shared by pool workers)")
     sw.add_argument("--pool", type=int, default=0,
                     help="worker processes (0 = serial)")
     sw.add_argument("--store", default=None,

@@ -1,12 +1,14 @@
 """Parallel evaluation engine for design-space exploration.
 
 Evaluates :class:`~repro.explore.space.DesignPoint` batches against one
-workload, at either fidelity:
+workload, at any rung of the fidelity ladder:
 
 * ``"analytic"`` — partition + the analytic cost model (fast; the
   screening fidelity for large sweeps and successive halving);
+* ``"trace"`` — StagePlan replay at unit/transfer granularity
+  (~100x faster than the simulator, within its documented band);
 * ``"simulate"`` — compile to ISA streams and run the cycle-accurate
-  simulator (ground truth; ~100x slower).
+  simulator (ground truth).
 
 The engine checks the content-addressed :class:`ResultCache` first, fans
 the misses out over a ``multiprocessing`` pool (the core pipeline is
@@ -14,30 +16,49 @@ numpy-only, so workers are cheap to spawn and fork-safe), writes results
 back to the cache, and optionally appends every record to a JSONL
 :class:`RecordStore`.  Results always come back in input order, and a
 given key always produces an identical record — cached or not.
+
+Cheap-fidelity misses (analytic / trace) are evaluated in *batches*:
+one ``flow.compile_many`` invocation partitions N candidate chips
+against the engine's single condensed graph, so an arch sweep pays the
+condense pass once per process instead of once per point.  A
+:class:`~repro.core.machine.Calibration` (see
+:meth:`ExplorationEngine.calibrate`) rides into every cheap evaluation
+— and into the cache key — so calibrated screening ranks match
+simulator ranks.
 """
 
 from __future__ import annotations
 
 import multiprocessing as mp
+import os
 import time
+import warnings
+from collections import defaultdict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from .. import flow
 from ..core import workloads
 from ..core.arch import ArchError, ChipConfig
 from ..core.graph import CondensedGraph
+from ..core.machine import Calibration
 from ..core.mapping import CostParams
 from ..flow import CompileOptions
+from ..flow.diskcache import ENV_VAR as _FLOW_CACHE_ENV
 from .cache import ResultCache, cache_key
 from .records import FIDELITIES, EvalRecord, RecordStore
 from .space import DesignPoint, DesignSpace
 
 __all__ = ["evaluate_chip", "ExplorationEngine"]
 
+# fidelities the batched compile_many path handles (no codegen needed)
+_CHEAP = ("analytic", "trace")
+
 
 def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
                   params: Optional[CostParams] = None,
-                  fidelity: str = "analytic") -> Dict[str, Any]:
+                  fidelity: str = "analytic",
+                  calibration: Optional[Calibration] = None
+                  ) -> Dict[str, Any]:
     """Score one (graph, chip, strategy) at the given fidelity.
 
     Runs on the :mod:`repro.flow` pass pipeline, so a point promoted
@@ -52,7 +73,8 @@ def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
     params = params or CostParams(batch=4)
     art = flow.compile(cg, chip,
                        CompileOptions(strategy=strategy, params=params,
-                                      fidelity=fidelity))
+                                      fidelity=fidelity,
+                                      calibration=calibration))
     rep = art.evaluate()
     return {"cycles": rep.cycles, "energy": dict(rep.energy),
             "throughput_sps": rep.throughput_sps}
@@ -66,9 +88,20 @@ _WORKER: Dict[str, Any] = {}
 
 
 def _init_worker(model: str, workload_kw: Dict[str, Any],
-                 params: CostParams) -> None:
+                 params: CostParams,
+                 calibration: Optional[Calibration] = None,
+                 flow_cache: Optional[str] = None) -> None:
+    if flow_cache:
+        os.environ[_FLOW_CACHE_ENV] = flow_cache
     _WORKER["cg"] = workloads.build(model, **workload_kw).condense()
     _WORKER["params"] = params
+    _WORKER["calibration"] = calibration
+
+
+def _err_payload(e: Exception, wall_s: float = 0.0) -> Dict[str, Any]:
+    return {"cycles": float("inf"), "energy": {"total": float("inf")},
+            "throughput_sps": 0.0, "wall_s": wall_s,
+            "error": f"{type(e).__name__}: {e}"}
 
 
 def _eval_worker(job: Tuple[DesignPoint, str]) -> Dict[str, Any]:
@@ -78,13 +111,63 @@ def _eval_worker(job: Tuple[DesignPoint, str]) -> Dict[str, Any]:
     t0 = time.perf_counter()
     try:
         out = evaluate_chip(_WORKER["cg"], point.chip(), point.strategy,
-                            _WORKER["params"], fidelity)
+                            _WORKER["params"], fidelity,
+                            _WORKER.get("calibration"))
     except Exception as e:        # noqa: BLE001 — point-local failure
-        out = {"cycles": float("inf"), "energy": {"total": float("inf")},
-               "throughput_sps": 0.0,
-               "error": f"{type(e).__name__}: {e}"}
+        out = _err_payload(e)
     out["wall_s"] = time.perf_counter() - t0
     return out
+
+
+def _eval_batch_worker(jobs: List[Tuple[DesignPoint, str]]
+                       ) -> List[Dict[str, Any]]:
+    """Batched cheap-fidelity evaluation: one ``flow.compile_many``
+    per (strategy, fidelity) group — the condense pass runs once for
+    the whole chunk.  Any group-level failure falls back to per-point
+    evaluation so one infeasible chip cannot poison its batch."""
+    cg = _WORKER["cg"]
+    params = _WORKER["params"]
+    calibration = _WORKER.get("calibration")
+    results: List[Optional[Dict[str, Any]]] = [None] * len(jobs)
+    groups: Dict[Tuple[str, str], List[int]] = defaultdict(list)
+    for i, (pt, fid) in enumerate(jobs):
+        groups[(pt.strategy, fid)].append(i)
+    for (strategy, fidelity), idxs in groups.items():
+        chips: List[ChipConfig] = []
+        ok: List[int] = []
+        for i in idxs:
+            try:
+                chips.append(jobs[i][0].chip())
+                ok.append(i)
+            except Exception as e:       # noqa: BLE001
+                results[i] = _err_payload(e)
+        if not ok:
+            continue
+        t0 = time.perf_counter()
+        try:
+            arts = flow.compile_many(
+                cg, chips,
+                CompileOptions(strategy=strategy, params=params,
+                               fidelity=fidelity,
+                               calibration=calibration))
+        except Exception:                # noqa: BLE001
+            # e.g. one chip infeasible mid-batch: isolate per point
+            for i in ok:
+                results[i] = _eval_worker(jobs[i])
+            continue
+        per_compile = (time.perf_counter() - t0) / len(arts)
+        for i, art in zip(ok, arts):
+            t1 = time.perf_counter()
+            try:
+                rep = art.evaluate()
+                results[i] = {
+                    "cycles": rep.cycles, "energy": dict(rep.energy),
+                    "throughput_sps": rep.throughput_sps,
+                    "wall_s": (time.perf_counter() - t1) + per_compile}
+            except Exception as e:       # noqa: BLE001
+                results[i] = _err_payload(
+                    e, (time.perf_counter() - t1) + per_compile)
+    return results
 
 
 class ExplorationEngine:
@@ -101,6 +184,16 @@ class ExplorationEngine:
         disable caching entirely.
     store:
         Optional ``RecordStore`` (or path) appended to on every eval.
+    calibration:
+        Per-unit correction factors applied to cheap fidelities
+        (analytic / trace) and mixed into every cache key.  Fit one
+        with :meth:`calibrate` or :func:`repro.flow.calibrate`.
+    flow_cache:
+        Directory for the :mod:`repro.flow` *pass-output* disk cache
+        (distinct from ``cache``, which stores finished evaluation
+        payloads).  Pool workers inherit it, so no worker ever
+        re-partitions a (workload, chip, strategy) any process has
+        already partitioned.
     """
 
     def __init__(self, model: str, params: Optional[CostParams] = None,
@@ -108,6 +201,8 @@ class ExplorationEngine:
                  cache: Union[ResultCache, str, None] = None,
                  store: Union[RecordStore, str, None] = None,
                  fidelity: str = "analytic",
+                 calibration: Optional[Calibration] = None,
+                 flow_cache: Optional[str] = None,
                  **workload_kw: Any) -> None:
         # validate eagerly: an unknown model raising inside a pool
         # worker's initializer would respawn workers forever
@@ -119,6 +214,27 @@ class ExplorationEngine:
         self.params = params or CostParams(batch=4)
         self.pool = int(pool)
         self.fidelity = fidelity
+        self.calibration = calibration
+        self.flow_cache = flow_cache
+        if flow_cache:
+            # the parent's default pipeline (and fork children) attach
+            # the disk tier; spawn children get it via the initializer.
+            # Rebind an existing tier too — parent and workers must
+            # agree on one directory or workers' partitions are lost.
+            # NOTE: the flow pass cache is process-wide by design (all
+            # compiles in this process funnel through the default
+            # pipeline), so the last engine constructed wins; warn when
+            # engines disagree instead of silently redirecting.
+            os.environ[_FLOW_CACHE_ENV] = flow_cache
+            pipe = flow.default_pipeline()
+            if pipe.disk is not None and pipe.disk.root != flow_cache:
+                warnings.warn(
+                    f"flow pass cache is process-wide: rebinding it "
+                    f"from {pipe.disk.root!r} to {flow_cache!r} for "
+                    f"every engine/compile in this process",
+                    RuntimeWarning, stacklevel=2)
+            if pipe.disk is None or pipe.disk.root != flow_cache:
+                pipe.disk = flow.PassDiskCache(flow_cache)
         if isinstance(cache, str):
             cache = ResultCache(cache)
         self.cache = cache
@@ -137,9 +253,51 @@ class ExplorationEngine:
     # -- keys ---------------------------------------------------------------
 
     def _key(self, point: DesignPoint, fidelity: str) -> str:
+        # calibration changes cheap-fidelity outcomes, so it must enter
+        # the key; the simulator is calibration-free by construction.
+        # Omit the kwarg entirely when uncalibrated so pre-calibration
+        # cache entries (including expensive simulator runs) stay valid.
+        extra: Dict[str, Any] = {"workload_kw": self.workload_kw}
+        if self.calibration is not None and fidelity in _CHEAP:
+            extra["calibration"] = self.calibration.to_dict()
         return cache_key(self.model, point.chip(), point.strategy,
-                         fidelity, self.params,
-                         workload_kw=self.workload_kw)
+                         fidelity, self.params, **extra)
+
+    # -- calibration --------------------------------------------------------
+
+    def calibrate(self, points: Sequence[DesignPoint],
+                  fidelity: Optional[str] = None,
+                  max_points: int = 3) -> Calibration:
+        """Fit (and adopt) per-unit correction factors for this
+        workload from perf-simulator runs on a few design points.
+
+        Each point costs one simulator run; factors are combined by
+        geometric mean across points so no single chip's quirks
+        dominate.  The fit is stored on the engine — subsequent cheap
+        evaluations (and their cache keys) use it automatically.
+        """
+        fidelity = fidelity or (self.fidelity
+                                if self.fidelity in _CHEAP
+                                else "analytic")
+        fits = []
+        for pt in list(points)[:max(1, max_points)]:
+            rep = flow.calibrate(
+                [(self.model, self.workload_kw)], pt.chip(),
+                strategy=pt.strategy, params=self.params,
+                fidelity=fidelity)
+            fits.append(rep.calibration)
+            # the fit's ground-truth run IS this point's simulator
+            # evaluation — seed the result cache so a later promotion
+            # of the same point is a hit instead of a re-simulation
+            row = rep.rows[0]
+            if self.cache is not None and row.sim_energy is not None:
+                self.cache.put(self._key(pt, "simulate"), {
+                    "cycles": row.sim_cycles,
+                    "energy": row.sim_energy,
+                    "throughput_sps": row.sim_throughput_sps,
+                    "wall_s": row.sim_wall_s})
+        self.calibration = Calibration.combine(fits)
+        return self.calibration
 
     # -- evaluation ---------------------------------------------------------
 
@@ -186,11 +344,15 @@ class ExplorationEngine:
         jobs = [(points[i], fidelity) for i in miss_idx]
         if jobs:
             if self.pool > 1 and len(jobs) > 1:
-                fresh = self._run_pool(jobs)
+                fresh = self._run_pool(jobs, fidelity)
             else:
                 _WORKER["cg"] = self.cg       # built once per engine
                 _WORKER["params"] = self.params
-                fresh = [_eval_worker(j) for j in jobs]
+                _WORKER["calibration"] = self.calibration
+                if fidelity in _CHEAP:
+                    fresh = _eval_batch_worker(jobs)
+                else:
+                    fresh = [_eval_worker(j) for j in jobs]
             for i, out in zip(miss_idx, fresh):
                 results[i] = out
                 # errors are deterministic for a given key but cheap to
@@ -222,23 +384,34 @@ class ExplorationEngine:
         """Exhaustive grid evaluation of a space."""
         return self.evaluate(space.points(), fidelity)
 
-    def _run_pool(self, jobs: List[Tuple[DesignPoint, str]]
-                  ) -> List[Dict[str, Any]]:
+    def _run_pool(self, jobs: List[Tuple[DesignPoint, str]],
+                  fidelity: str) -> List[Dict[str, Any]]:
         try:
             # fork children inherit the parent's prepared graph — no
             # per-worker workloads.build() in the initializer
             ctx = mp.get_context("fork")
             _WORKER["cg"] = self.cg
             _WORKER["params"] = self.params
+            _WORKER["calibration"] = self.calibration
             init, initargs = None, ()
         except ValueError:
             ctx = mp.get_context("spawn")
             init = _init_worker
-            initargs = (self.model, self.workload_kw, self.params)
+            initargs = (self.model, self.workload_kw, self.params,
+                        self.calibration, self.flow_cache)
         n = min(self.pool, len(jobs))
         chunk = max(1, len(jobs) // (n * 4))
         with ctx.Pool(processes=n, initializer=init,
                       initargs=initargs) as pool:
+            if fidelity in _CHEAP:
+                # batched path: each worker chunk shares one condense
+                # (and one compile_many per strategy in the chunk)
+                chunks = [jobs[i:i + chunk]
+                          for i in range(0, len(jobs), chunk)]
+                out: List[Dict[str, Any]] = []
+                for batch in pool.map(_eval_batch_worker, chunks):
+                    out.extend(batch)
+                return out
             return pool.map(_eval_worker, jobs, chunksize=chunk)
 
     def cache_stats(self) -> Dict[str, int]:

@@ -20,7 +20,9 @@ from .space import DesignPoint
 
 __all__ = ["FIDELITIES", "EvalRecord", "RecordStore"]
 
-FIDELITIES = ("analytic", "simulate")
+# the fidelity ladder, cheap to expensive ("func" is a validation mode,
+# not an exploration fidelity)
+FIDELITIES = ("analytic", "trace", "simulate")
 
 _ENERGY_KEYS = ("compute", "weight_load", "noc", "gmem", "lmem", "static")
 

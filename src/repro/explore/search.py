@@ -141,22 +141,43 @@ def hill_climb(engine: ExplorationEngine, space: DesignSpace,
 def successive_halving(engine: ExplorationEngine,
                        points_or_space, top_k: int = 4,
                        objective: Objective = by_edp,
+                       screen_fidelity: str = "analytic",
+                       calibrate: int = 0,
                        ) -> Tuple[SearchResult, List[EvalRecord]]:
-    """Two-fidelity screening: analytic everywhere, simulate the top-K.
+    """Two-fidelity screening: cheap everywhere, simulate the top-K.
+
+    ``screen_fidelity`` picks the cheap rung (``"analytic"`` or
+    ``"trace"``).  With ``calibrate=N > 0`` the screen runs twice: a
+    raw pass picks N representative points, the engine fits per-unit
+    correction factors from their simulator runs
+    (:meth:`ExplorationEngine.calibrate`), and the *calibrated* screen
+    decides the promotions — the fix for cheap-model mis-rankings on
+    communication-heavy workloads (the resnet18@112 ~10x gap).
 
     Returns ``(result, screened)`` where ``result`` ranks only the
-    simulator-validated survivors and ``screened`` holds the full
-    analytic pass (for Pareto plots of the whole space).
+    simulator-validated survivors and ``screened`` holds the final
+    cheap-fidelity pass (for Pareto plots of the whole space).
     """
     if isinstance(points_or_space, DesignSpace):
         points = points_or_space.points()
     else:
         points = list(points_or_space)
-    screened = engine.evaluate(points, fidelity="analytic")
+    screened = engine.evaluate(points, fidelity=screen_fidelity)
+    n_evals = len(screened)
+    if calibrate > 0:
+        ranked = sorted(screened, key=objective)
+        anchors = [r.point for r in ranked[:calibrate] if r.ok]
+        if anchors:
+            engine.calibrate(anchors, fidelity=screen_fidelity,
+                             max_points=calibrate)
+            n_evals += len(anchors)     # one simulator run per anchor
+            screened = engine.evaluate(points,
+                                       fidelity=screen_fidelity)
+            n_evals += len(screened)
     ranked = sorted(screened, key=objective)
     survivors = [r.point for r in ranked[:max(1, top_k)]]
     promoted = engine.evaluate(survivors, fidelity="simulate")
     res = SearchResult(best=_pick_best(promoted, objective),
                        history=promoted,
-                       n_evals=len(screened) + len(promoted))
+                       n_evals=n_evals + len(promoted))
     return res, screened

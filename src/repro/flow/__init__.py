@@ -32,23 +32,29 @@ The legacy free functions (``repro.core.partition.partition``,
 the same internals.
 """
 
+from ..core.machine import Calibration, MachineModel, machine_for
 from .backends import (BACKENDS, AnalyticBackend, Backend, EvalReport,
-                       SimulatorBackend, backend_for_fidelity,
-                       register_backend, resolve_backend)
+                       SimulatorBackend, TraceBackend,
+                       backend_for_fidelity, register_backend,
+                       resolve_backend)
+from .calibrate import CalibrationReport, CalibrationRow, calibrate
+from .diskcache import PassDiskCache
 from .options import FIDELITIES, CompileOptions
 from .passes import (PASS_REGISTRY, CodegenPass, CondensePass, Pass,
                      PartitionPass, PassRecord, PipelineContext,
                      get_pass, partition_pass_name, register_pass)
-from .pipeline import (Artifact, Pipeline, compile, default_pipeline,
-                       workload_fingerprint)
+from .pipeline import (Artifact, Pipeline, compile, compile_many,
+                       default_pipeline, workload_fingerprint)
 
 __all__ = [
-    "compile", "CompileOptions", "FIDELITIES", "Artifact", "Pipeline",
-    "default_pipeline", "workload_fingerprint",
+    "compile", "compile_many", "CompileOptions", "FIDELITIES",
+    "Artifact", "Pipeline", "default_pipeline", "workload_fingerprint",
     "Pass", "PassRecord", "PipelineContext", "PASS_REGISTRY",
     "register_pass", "get_pass", "partition_pass_name",
     "CondensePass", "PartitionPass", "CodegenPass",
-    "Backend", "EvalReport", "AnalyticBackend", "SimulatorBackend",
-    "BACKENDS", "register_backend", "resolve_backend",
-    "backend_for_fidelity",
+    "Backend", "EvalReport", "AnalyticBackend", "TraceBackend",
+    "SimulatorBackend", "BACKENDS", "register_backend",
+    "resolve_backend", "backend_for_fidelity",
+    "calibrate", "CalibrationReport", "CalibrationRow",
+    "Calibration", "MachineModel", "machine_for", "PassDiskCache",
 ]

@@ -5,12 +5,20 @@ A :class:`Backend` turns a compiled artifact into an
 
 * :class:`AnalyticBackend` — the mapping cost model's stage latencies
   and energy-event ledger (no codegen; fast screening fidelity).
+* :class:`TraceBackend` — replays each StagePlan at unit/transfer
+  granularity on :class:`repro.core.trace.TraceEngine` (no codegen, no
+  per-instruction stepping; the middle rung of the fidelity ladder).
 * :class:`SimulatorBackend` — runs the per-core ISA streams on the
   cycle-accurate simulator (``mode="perf"``) or the functional ISS
   (``mode="func"``, which additionally needs a ``gmem_image``).
 
+All three price energy through the shared
+:class:`~repro.core.machine.MachineModel`; the analytic and trace
+backends additionally honor ``CompileOptions.calibration`` (fit via
+:func:`repro.flow.calibrate`).
+
 Backends resolve by name through :data:`BACKENDS` (``"analytic"``,
-``"simulate"``/``"perf"``, ``"func"``), so
+``"trace"``, ``"simulate"``/``"perf"``, ``"func"``), so
 ``artifact.evaluate(backend="simulate")`` and custom registered
 backends compose without touching callers.
 """
@@ -23,10 +31,11 @@ from typing import Any, Dict, Optional, Union
 
 import numpy as np
 
-from ..core.energy import energy_breakdown
+from ..core.machine import machine_for
 from ..core.simulator import SimReport, Simulator
+from ..core.trace import TraceEngine, TraceReport
 
-__all__ = ["EvalReport", "Backend", "AnalyticBackend",
+__all__ = ["EvalReport", "Backend", "AnalyticBackend", "TraceBackend",
            "SimulatorBackend", "BACKENDS", "resolve_backend",
            "register_backend", "backend_for_fidelity"]
 
@@ -41,7 +50,8 @@ class EvalReport:
     throughput_sps: float          # samples/s at the chip clock
     batch: int
     wall_s: float = 0.0
-    sim: Optional[SimReport] = None   # simulator backends only
+    sim: Optional[SimReport] = None     # simulator backends only
+    trace: Optional[TraceReport] = None  # trace backend only
 
     @property
     def energy_total(self) -> float:
@@ -87,12 +97,36 @@ class AnalyticBackend(Backend):
         t0 = time.perf_counter()
         res = artifact.partition
         batch = artifact.options.resolved_batch()
-        cycles = float(res.latency_cycles(batch))
-        energy = dict(energy_breakdown(res.energy_events(batch)))
+        calib = artifact.options.calibration
+        cycles = float(res.latency_cycles(batch, calib))
+        energy = dict(machine_for(artifact.chip).price_events(
+            res.energy_events(batch, calib)))
         return EvalReport(
             backend=self.name, cycles=cycles, energy=energy,
             throughput_sps=_throughput(artifact.chip, cycles, batch),
             batch=batch, wall_s=time.perf_counter() - t0)
+
+
+class TraceBackend(Backend):
+    """StagePlan replay on the shared machine model (middle fidelity)."""
+
+    name = "trace"
+    requires_model = False
+
+    def evaluate(self, artifact: Any, **kw: Any) -> EvalReport:
+        if kw:
+            raise TypeError(f"trace backend takes no extra arguments, "
+                            f"got {sorted(kw)}")
+        t0 = time.perf_counter()
+        batch = artifact.options.resolved_batch()
+        engine = TraceEngine(artifact.chip,
+                             artifact.options.calibration)
+        rep = engine.run(artifact.partition, batch)
+        return EvalReport(
+            backend=self.name, cycles=float(rep.cycles),
+            energy=dict(rep.energy()),
+            throughput_sps=_throughput(artifact.chip, rep.cycles, batch),
+            batch=batch, wall_s=time.perf_counter() - t0, trace=rep)
 
 
 class SimulatorBackend(Backend):
@@ -139,6 +173,7 @@ def register_backend(b: Backend, *aliases: str,
 
 
 register_backend(AnalyticBackend())
+register_backend(TraceBackend())
 register_backend(SimulatorBackend("perf"), "perf")
 register_backend(SimulatorBackend("func"))
 
@@ -162,5 +197,5 @@ def resolve_backend(backend: Union[str, Backend, None],
 
 def backend_for_fidelity(fidelity: str) -> str:
     """CompileOptions.fidelity -> default backend name."""
-    return {"analytic": "analytic", "simulate": "simulate",
-            "func": "func"}[fidelity]
+    return {"analytic": "analytic", "trace": "trace",
+            "simulate": "simulate", "func": "func"}[fidelity]

@@ -1,0 +1,197 @@
+"""On-disk pass-output cache for the :mod:`repro.flow` pipeline.
+
+The in-process LRU gives cross-fidelity partition reuse, but pool
+workers (``repro.explore`` fans sweeps over a ``multiprocessing`` pool)
+each start with a cold cache and re-partition their own misses.  This
+cache persists pass outputs across processes using the same
+content-addressing discipline as :mod:`repro.explore.cache`: entries
+are sharded by key prefix (``<root>/ab/<key>.pkl``) and written
+atomically (tmp + rename), so concurrent workers never observe torn
+files and overlapping sweeps share partitions for free.
+
+Payloads are pickles (pass outputs are ``CondensedGraph`` /
+``PartitionResult`` objects, not JSON-shaped); a corrupt or
+version-skewed entry is treated as a miss and overwritten.  Point every
+process at the same directory via ``Pipeline(disk_cache=...)`` or the
+``REPRO_FLOW_CACHE`` environment variable (which
+:func:`repro.flow.default_pipeline` honors — that is how pool workers
+inherit it).
+"""
+
+from __future__ import annotations
+
+import bisect
+import os
+import pickle
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["PassDiskCache", "ENV_VAR"]
+
+ENV_VAR = "REPRO_FLOW_CACHE"
+
+
+class PassDiskCache:
+    """Sharded pickle cache keyed by the pipeline chain digest.
+
+    Carries the same eviction discipline as
+    :class:`repro.explore.cache.ResultCache`: nothing ages out
+    automatically, but :meth:`prune` drops entries older than
+    ``max_age_days`` (file mtime) and then the oldest beyond
+    ``max_entries`` — safe to run alongside live sweeps (``put`` is
+    atomic, readers treat vanished files as misses).
+    """
+
+    def __init__(self, root: str,
+                 max_age_days: Optional[float] = None,
+                 max_entries: Optional[int] = None) -> None:
+        self.root = root
+        self.max_age_days = max_age_days
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], key + ".pkl")
+
+    def get(self, key: str) -> Tuple[bool, Any]:
+        try:
+            with open(self._path(key), "rb") as f:
+                out = pickle.load(f)
+        except (OSError, pickle.UnpicklingError, EOFError,
+                AttributeError, ImportError):
+            # missing, torn, or pickled against older class layouts
+            self.misses += 1
+            return False, None
+        self.hits += 1
+        return True, out
+
+    def put(self, key: str, value: Any) -> None:
+        path = self._path(key)
+        sdir = os.path.dirname(path)
+        for _ in range(8):
+            os.makedirs(sdir, exist_ok=True)
+            try:
+                fd, tmp = tempfile.mkstemp(dir=sdir, suffix=".tmp")
+                break
+            except FileNotFoundError:
+                continue    # concurrent prune rmdir'd the empty shard
+        else:
+            raise OSError(f"cache shard {sdir} keeps vanishing "
+                          f"(concurrent prune?)")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(value, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _entries(self) -> List[Tuple[float, str]]:
+        """All entry files as sorted ``(mtime, path)``, oldest first."""
+        out: List[Tuple[float, str]] = []
+        if not os.path.isdir(self.root):
+            return out
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            try:
+                names = os.listdir(sdir)
+            except (NotADirectoryError, FileNotFoundError):
+                continue
+            for f in names:
+                if not f.endswith(".pkl"):
+                    continue
+                path = os.path.join(sdir, f)
+                try:
+                    out.append((os.path.getmtime(path), path))
+                except OSError:
+                    continue          # concurrently pruned
+        out.sort()
+        return out
+
+    def prune(self, max_age_days: Optional[float] = None,
+              max_entries: Optional[int] = None,
+              now: Optional[float] = None) -> int:
+        """Evict by age then by count; returns how many were removed.
+
+        Limits default to the construction-time ones; ``None`` disables
+        that criterion.  ``now`` is injectable for tests.
+        """
+        max_age_days = (self.max_age_days if max_age_days is None
+                        else max_age_days)
+        max_entries = (self.max_entries if max_entries is None
+                       else max_entries)
+        entries = self._entries()
+        now = time.time() if now is None else now
+        doomed: List[str] = []
+        if max_age_days is not None:
+            cutoff = now - max_age_days * 86400.0
+            i = bisect.bisect_left(entries, (cutoff,))
+            doomed.extend(p for _, p in entries[:i])
+            entries = entries[i:]
+        if max_entries is not None and len(entries) > max_entries:
+            extra = len(entries) - max_entries
+            doomed.extend(p for _, p in entries[:extra])
+        removed = 0
+        for path in doomed:
+            try:
+                os.unlink(path)
+                removed += 1
+            except OSError:
+                pass
+        for shard in os.listdir(self.root) if os.path.isdir(self.root) \
+                else ():
+            sdir = os.path.join(self.root, shard)
+            if os.path.isdir(sdir) and not os.listdir(sdir):
+                try:
+                    os.rmdir(sdir)
+                except OSError:
+                    pass
+        return removed
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def __len__(self) -> int:
+        n = 0
+        if not os.path.isdir(self.root):
+            return 0
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            try:
+                n += sum(1 for f in os.listdir(sdir)
+                         if f.endswith(".pkl"))
+            except (NotADirectoryError, FileNotFoundError):
+                continue
+        return n
+
+    def clear(self) -> int:
+        n = 0
+        if not os.path.isdir(self.root):
+            return 0
+        for shard in os.listdir(self.root):
+            sdir = os.path.join(self.root, shard)
+            try:
+                names = os.listdir(sdir)
+            except (NotADirectoryError, FileNotFoundError):
+                continue
+            for f in names:
+                if f.endswith(".pkl"):
+                    try:
+                        os.unlink(os.path.join(sdir, f))
+                        n += 1
+                    except OSError:
+                        pass
+            try:
+                os.rmdir(sdir)
+            except OSError:
+                pass
+        return n
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}

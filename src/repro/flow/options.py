@@ -18,13 +18,16 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 from ..core.codegen import QuantParams
+from ..core.machine import Calibration
 from ..core.mapping import CostParams
 
 __all__ = ["CompileOptions", "FIDELITIES"]
 
-# "analytic": cost model only (no codegen); "simulate": perf-mode
-# cycle-accurate run; "func": functional ISS (bit-exact data semantics).
-FIDELITIES = ("analytic", "simulate", "func")
+# The fidelity ladder: "analytic" = closed-form cost model (no
+# codegen); "trace" = StagePlan replay at unit/transfer granularity;
+# "simulate" = perf-mode cycle-accurate run; "func" = functional ISS
+# (bit-exact data semantics).
+FIDELITIES = ("analytic", "trace", "simulate", "func")
 
 
 @dataclass(frozen=True)
@@ -45,6 +48,10 @@ class CompileOptions:
     params: CostParams = field(default_factory=CostParams)
     workload_kw: Optional[Mapping[str, Any]] = None   # for str workloads
     dump_dir: Optional[str] = None    # per-pass JSON IR dumps (debugging)
+    # per-unit correction factors applied by the analytic and trace
+    # backends at evaluation time (fit via repro.flow.calibrate); the
+    # partition search itself stays uncalibrated and cache-shared
+    calibration: Optional[Calibration] = None
 
     def __post_init__(self) -> None:
         if self.fidelity not in FIDELITIES:
@@ -92,6 +99,8 @@ class CompileOptions:
             v = getattr(self, f)
             if f == "params":
                 v = dataclasses.asdict(v)
+            elif f == "calibration":
+                v = v.to_dict() if v is not None else None
             elif f == "quant":
                 v = [[gid, qp.scale, qp.shift]
                      for gid, qp in (v or ())]

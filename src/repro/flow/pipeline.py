@@ -23,9 +23,10 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -34,12 +35,14 @@ from ..core.codegen import CompiledModel
 from ..core.graph import CondensedGraph, Graph
 from ..core.partition import PartitionResult
 from .backends import Backend, EvalReport, resolve_backend
+from .diskcache import ENV_VAR as _CACHE_ENV
+from .diskcache import PassDiskCache
 from .options import CompileOptions
 from .passes import (CodegenPass, Pass, PassRecord, PipelineContext,
                      get_pass, partition_pass_name)
 
-__all__ = ["Artifact", "Pipeline", "compile", "default_pipeline",
-           "workload_fingerprint"]
+__all__ = ["Artifact", "Pipeline", "compile", "compile_many",
+           "default_pipeline", "workload_fingerprint"]
 
 
 def workload_fingerprint(workload: Any) -> str:
@@ -131,6 +134,26 @@ class Artifact:
 
     # -- conveniences ---------------------------------------------------------
 
+    def replace_options(self, **kw: Any) -> "Artifact":
+        """This artifact under tweaked *evaluation* options — the
+        compiled partition is shared, nothing re-runs.  Fields that
+        feed codegen (``batch``, ``quant``, ``strict_lmem``) drop the
+        cached model so ``ensure_model`` re-lowers on demand; fields
+        that determine the partition itself (``strategy``, ``params``,
+        ``workload_kw``) cannot be swapped under a finished compile —
+        re-run :func:`compile` for those."""
+        import dataclasses as _dc
+        stale = {"strategy", "params", "workload_kw"} & set(kw)
+        if stale:
+            raise ValueError(
+                f"{sorted(stale)} change the partition; recompile via "
+                f"flow.compile(...) instead of replace_options")
+        opts = self.options.replace(**kw)
+        keep_model = self._model if not (
+            {"batch", "quant", "strict_lmem"} & set(kw)) else None
+        return _dc.replace(self, options=opts, trace=list(self.trace),
+                           _model=keep_model)
+
     def build_gmem_image(self, weights, biases, inputs) -> np.ndarray:
         return self.ensure_model().build_gmem_image(weights, biases,
                                                     inputs)
@@ -163,7 +186,7 @@ class Artifact:
 
 
 class Pipeline:
-    """Pass runner with an LRU pass-output cache.
+    """Pass runner with a two-tier (LRU + optional disk) output cache.
 
     One pipeline's cache is shared across all its ``compile()`` calls;
     the module-level :func:`default_pipeline` gives every caller in a
@@ -173,11 +196,21 @@ class Pipeline:
     are a few KB each — codegen outputs are never cached) so an
     analytic screen's partitions survive until the simulator
     promotion.
+
+    ``disk_cache`` (a directory path or :class:`PassDiskCache`) adds a
+    persistent tier below the LRU, shared *across processes*: explore's
+    pool workers — and tomorrow's re-run of the same sweep — skip
+    re-partitioning anything any process already partitioned.
     """
 
-    def __init__(self, cache_size: int = 8192) -> None:
+    def __init__(self, cache_size: int = 8192,
+                 disk_cache: Union[str, PassDiskCache, None] = None
+                 ) -> None:
         self.cache_size = int(cache_size)
         self._cache: "OrderedDict[str, Any]" = OrderedDict()
+        if isinstance(disk_cache, str):
+            disk_cache = PassDiskCache(disk_cache)
+        self.disk = disk_cache
         self.hits = 0
         self.misses = 0
 
@@ -188,10 +221,16 @@ class Pipeline:
             self._cache.move_to_end(key)
             self.hits += 1
             return True, self._cache[key]
+        if self.disk is not None:
+            ok, out = self.disk.get(key)
+            if ok:
+                self.hits += 1
+                self._mem_put(key, out)     # promote to the hot tier
+                return True, out
         self.misses += 1
         return False, None
 
-    def _cache_put(self, key: str, value: Any) -> None:
+    def _mem_put(self, key: str, value: Any) -> None:
         if self.cache_size <= 0:
             return
         self._cache[key] = value
@@ -199,9 +238,18 @@ class Pipeline:
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
 
+    def _cache_put(self, key: str, value: Any) -> None:
+        self._mem_put(key, value)
+        if self.disk is not None:
+            self.disk.put(key, value)
+
     def cache_info(self) -> Dict[str, int]:
-        return {"entries": len(self._cache), "hits": self.hits,
+        info = {"entries": len(self._cache), "hits": self.hits,
                 "misses": self.misses}
+        if self.disk is not None:
+            info["disk_hits"] = self.disk.hits
+            info["disk_misses"] = self.disk.misses
+        return info
 
     def clear_cache(self) -> None:
         self._cache.clear()
@@ -245,6 +293,19 @@ class Pipeline:
         eagerly for simulator fidelities and lazily (on
         ``Artifact.ensure_model`` / a simulator backend) otherwise.
         """
+        return self.compile_many(workload, [chip], options, **kw)[0]
+
+    def compile_many(self, workload: Any, chips: Sequence[ChipConfig],
+                     options: Optional[CompileOptions] = None,
+                     **kw: Any) -> List[Artifact]:
+        """Compile one workload against N chips in a single invocation.
+
+        The condense pass runs (or cache-hits) exactly once; only the
+        chip-dependent partition pass repeats per candidate.  This is
+        the batched analytic-evaluation path of arch sweeps: the shared
+        machine model is O(1) to derive per chip, so the marginal cost
+        of an extra candidate is one partition.
+        """
         if options is None:
             options = CompileOptions(**kw)
         elif kw:
@@ -258,39 +319,55 @@ class Pipeline:
                 f"{partition_pass_name(options.strategy)!r} pass "
                 f"registered") from None
 
-        ctx = PipelineContext(workload=workload, chip=chip,
-                              options=options)
         # condense is chip-independent: keying it on the workload alone
         # lets one cache entry serve every chip in an arch sweep.  The
         # chip fingerprint enters the chain between condense and the
         # (chip-dependent) partition/codegen passes.
         base = hashlib.sha256(
             workload_fingerprint(workload).encode()).hexdigest()
+        ctx0 = PipelineContext(workload=workload,
+                               chip=chips[0] if chips else None,
+                               options=options)
+        _, cond_rec, cond_key = self._run_pass(get_pass("condense"),
+                                               ctx0, base)
 
-        trace: List[PassRecord] = []
-        _, rec, key = self._run_pass(get_pass("condense"), ctx, base)
-        trace.append(rec)
-        key = hashlib.sha256(
-            f"{key}|chip:{_chip_fingerprint(chip)}".encode()).hexdigest()
-        _, rec, key = self._run_pass(part_pass, ctx, key)
-        trace.append(rec)
-
-        art = Artifact(workload=workload, chip=chip, options=options,
-                       cg=ctx.cg, partition=ctx.partition, trace=trace,
-                       _pipeline=self, _chain_key=key)
-        if options.fidelity != "analytic":
-            art.ensure_model()
-        return art
+        arts: List[Artifact] = []
+        for chip in chips:
+            ctx = PipelineContext(workload=workload, chip=chip,
+                                  options=options, cg=ctx0.cg)
+            key = hashlib.sha256(
+                f"{cond_key}|chip:{_chip_fingerprint(chip)}"
+                .encode()).hexdigest()
+            _, rec, key = self._run_pass(part_pass, ctx, key)
+            art = Artifact(workload=workload, chip=chip,
+                           options=options, cg=ctx.cg,
+                           partition=ctx.partition,
+                           trace=[cond_rec, rec],
+                           _pipeline=self, _chain_key=key)
+            # only the simulator fidelities need ISA streams; analytic
+            # and trace evaluate straight off the partition
+            if options.fidelity in ("simulate", "func"):
+                art.ensure_model()
+            arts.append(art)
+        return arts
 
 
 _DEFAULT_PIPELINE: Optional[Pipeline] = None
 
 
 def default_pipeline() -> Pipeline:
-    """The process-wide pipeline (shared pass-output cache)."""
+    """The process-wide pipeline (shared pass-output cache).
+
+    When the ``REPRO_FLOW_CACHE`` environment variable names a
+    directory, the pipeline also persists pass outputs there —
+    processes pointed at the same directory (e.g. explore pool
+    workers) share partitions.  Set before first use; the pipeline is
+    created once per process.
+    """
     global _DEFAULT_PIPELINE
     if _DEFAULT_PIPELINE is None:
-        _DEFAULT_PIPELINE = Pipeline()
+        _DEFAULT_PIPELINE = Pipeline(
+            disk_cache=os.environ.get(_CACHE_ENV) or None)
     return _DEFAULT_PIPELINE
 
 
@@ -306,3 +383,13 @@ def compile(workload: Any, chip: ChipConfig,
     """
     return (pipeline or default_pipeline()).compile(workload, chip,
                                                     options, **kw)
+
+
+def compile_many(workload: Any, chips: Sequence[ChipConfig],
+                 options: Optional[CompileOptions] = None, *,
+                 pipeline: Optional[Pipeline] = None,
+                 **kw: Any) -> List[Artifact]:
+    """Batched compile: one workload, N candidate chips, one condense
+    (see :meth:`Pipeline.compile_many`)."""
+    return (pipeline or default_pipeline()).compile_many(
+        workload, chips, options, **kw)

@@ -1,0 +1,155 @@
+"""Unit tests for the shared machine model (repro.core.machine)."""
+
+import math
+
+import pytest
+
+from repro.core.arch import default_chip
+from repro.core.isa import default_isa
+from repro.core.machine import (Calibration, IDENTITY_CALIBRATION,
+                                MachineModel, VECTOR_MUL_FNS,
+                                VECTOR_SPECIAL_FNS, machine_for)
+from repro.core.simulator import Simulator
+
+
+@pytest.fixture(scope="module")
+def chip():
+    return default_chip()
+
+
+@pytest.fixture(scope="module")
+def m(chip):
+    return machine_for(chip)
+
+
+def test_machine_memoized(chip, m):
+    # equal chip descriptions share one model instance
+    assert machine_for(default_chip()) is m
+    assert chip.machine() is m
+    assert machine_for(chip, Calibration(cim=2.0)) is not m
+
+
+def test_mvm_timing_matches_macro(chip, m):
+    macro = chip.core.cim.macro
+    assert m.mvm_interval_beats == macro.act_bits
+    assert m.mvm_fill_beats == macro.adder_tree_depth
+    assert m.mvm_pass_beats == macro.mvm_beats()
+    assert m.mvm_cycles(10) == 10 * macro.act_bits \
+        + macro.adder_tree_depth
+
+
+def test_weight_load(chip, m):
+    rate = chip.core.cim.weight_load_rows_per_cycle
+    assert m.weight_load_cycles(512) == 512 / rate
+    assert m.group_load_cycles() == chip.core.cim.macro.rows / rate
+
+
+def test_vector_latency_classes(chip, m):
+    v = chip.core.vector
+    n = v.lanes * 3
+    assert m.vector_cycles("add", n) == 3 + v.alu_latency
+    for fn in VECTOR_MUL_FNS:
+        assert m.vector_cycles(fn, n) == 3 + v.mul_latency
+    for fn in VECTOR_SPECIAL_FNS:
+        assert m.vector_cycles(fn, n) == 3 * v.special_latency
+    # sub-lane ops still cost one beat
+    assert m.vector_cycles("add", 1) == 1 + v.alu_latency
+
+
+def test_noc_rules(chip, m):
+    noc = chip.noc
+    assert m.link_bytes_per_cycle == noc.link_bytes_per_cycle
+    assert m.router_hop_cycles == noc.router_latency
+    assert m.link_occupancy_cycles(noc.flit_bytes * 4) \
+        == 4 / noc.flits_per_cycle
+    assert m.link_occupancy_cycles(1) == 1 / noc.flits_per_cycle
+    assert m.send_issue_cycles(1) == 1.0          # floor of one cycle
+    assert m.avg_hops == (chip.mesh_rows + chip.mesh_cols) / 3.0
+    assert m.hops(0, 9) == chip.hops(0, 9)
+
+
+def test_gmem_rules(chip, m):
+    per_port = chip.global_mem_bytes_per_cycle
+    ports = chip.global_mem_ports
+    assert m.gmem_total_bytes_per_cycle == ports * per_port
+    assert m.gmem_stream_cycles(per_port) == 1 / ports
+    assert m.gmem_stream_cycles(per_port, ports=1) == 1.0
+    # ports clamp to the chip's count
+    assert m.gmem_stream_cycles(per_port, ports=99) == 1 / ports
+
+
+def test_scalar_rules(chip, m):
+    s = chip.core.scalar
+    assert m.scalar_alu_cycles == s.alu_latency
+    assert m.scalar_mul_cycles == s.mul_latency
+    assert m.scalar_ldst_cycles == s.ldst_latency
+    assert m.branch_cycles(False) == 1
+    assert m.branch_cycles(True) == 1 + s.branch_penalty
+
+
+def test_simulator_shares_machine(chip, m):
+    sim = Simulator(chip, default_isa())
+    assert sim.m is m
+
+
+def test_energy_pricing(chip, m):
+    out = m.price_events({"gmem_bytes": 1000.0})
+    assert out["gmem"] == pytest.approx(
+        1000.0 * m.energy_table.gmem_byte)
+    assert out["total"] == out["gmem"]
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_identity():
+    assert Calibration().is_identity
+    assert IDENTITY_CALIBRATION.is_identity
+    assert not Calibration(vector=2.0).is_identity
+
+
+def test_calibration_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        Calibration(cim=0.0)
+    with pytest.raises(ValueError):
+        Calibration(makespan=-1.0)
+    with pytest.raises(ValueError):
+        Calibration(noc=float("inf"))
+
+
+def test_calibration_dict_roundtrip():
+    c = Calibration(cim=1.5, vector=9.0, noc=3.0, gmem=3.0,
+                    load=1.2, makespan=2.5)
+    assert Calibration.from_dict(c.to_dict()) == c
+
+
+def test_calibration_combine_geomean():
+    a = Calibration(vector=2.0)
+    b = Calibration(vector=8.0)
+    comb = Calibration.combine([a, b])
+    assert comb.vector == pytest.approx(4.0)
+    assert comb.cim == pytest.approx(1.0)
+    assert Calibration.combine([]) == Calibration()
+
+
+def test_calibrated_stage_costs(chip):
+    """Calibration scales the analytic stage arithmetic predictably."""
+    from repro import flow
+    from repro.core.mapping import CostParams
+
+    art = flow.compile("tiny_cnn", chip,
+                       flow.CompileOptions(strategy="dp",
+                                           params=CostParams(batch=4)))
+    res = art.partition
+    base = res.latency_cycles(4)
+    doubled = res.latency_cycles(4, Calibration(makespan=2.0))
+    assert doubled == pytest.approx(2 * base)
+    # scaling every unit by k scales the whole latency by k
+    k = 3.0
+    allk = Calibration(cim=k, vector=k, noc=k, gmem=k, load=k)
+    assert res.latency_cycles(4, allk) == pytest.approx(k * base)
+    # the dominant-unit max still rules the interval
+    sp = res.stages[0]
+    assert sp.interval_c(Calibration(vector=100.0)) >= sp.interval_c()
