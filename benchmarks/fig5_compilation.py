@@ -8,14 +8,22 @@ where capacity-first partitioning leaves too few vacant cores for
 opportunistic duplication.
 
 Runs on the :mod:`repro.flow` pipeline: one ``compile`` per strategy,
-scored by the analytic or the simulator backend; the condense pass is
-shared across strategies through the pipeline's pass-output cache.
+scored at any rung of the fidelity ladder; the condense pass is shared
+across strategies through the pipeline's pass-output cache.  The
+default fidelity is ``trace`` (the calibratable middle rung — within
+2x of perf cycles at a fraction of the cost); ``--fidelity simulate``
+reproduces the paper's cycle-accurate numbers, ``--fidelity analytic``
+is the fast screen.
+
+    PYTHONPATH=src python -m benchmarks.fig5_compilation
+        [--fidelity {analytic,trace,simulate}] [--calibration NAME]
 """
 
 from __future__ import annotations
 
+import argparse
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro import flow
 from repro.core import workloads
@@ -29,11 +37,13 @@ RES = 112            # keep the cycle-accurate runs CPU-friendly
 BATCH = 4
 
 
-def run(simulate: bool = True) -> List[Dict]:
+def run(simulate: Optional[bool] = None, fidelity: str = "trace",
+        calibration: Optional[str] = None) -> List[Dict]:
+    if simulate is not None:        # legacy boolean knob
+        fidelity = "simulate" if simulate else "analytic"
     chip = default_chip()
     opts = CompileOptions(params=CostParams(batch=BATCH),
-                          fidelity="simulate" if simulate
-                          else "analytic")
+                          fidelity=fidelity, calibration=calibration)
     rows: List[Dict] = []
     for model in MODELS:
         cg = workloads.build(model, res=RES).condense()
@@ -71,4 +81,13 @@ def report(rows: List[Dict]) -> str:
 
 
 if __name__ == "__main__":
-    print(report(run()))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fidelity", default="trace",
+                    choices=("analytic", "trace", "simulate"),
+                    help="evaluation fidelity (default: trace)")
+    ap.add_argument("--calibration", default=None,
+                    help="named calibration preset to apply to cheap "
+                         "fidelities (results/calibrations/<name>.json)")
+    args = ap.parse_args()
+    print(report(run(fidelity=args.fidelity,
+                     calibration=args.calibration)))

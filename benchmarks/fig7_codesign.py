@@ -9,9 +9,13 @@ integrated SW/HW exploration.
 Runs on the ``repro.explore`` engine (pool + result cache, evaluating
 through the :mod:`repro.flow` pass pipeline) and appends a
 cycles-vs-energy Pareto frontier per model — the co-design trade-off
-curve the serial seed driver could not produce.
+curve the serial seed driver could not produce.  The default fidelity
+is ``trace`` (the calibratable middle rung of the ladder);
+``--fidelity`` overrides, and ``--simulate`` stays as a legacy alias
+for ``--fidelity simulate``.
 
-    PYTHONPATH=src python -m benchmarks.fig7_codesign [--simulate]
+    PYTHONPATH=src python -m benchmarks.fig7_codesign
+        [--fidelity {analytic,trace,simulate}] [--calibration NAME]
         [--pool N] [--no-cache]
 """
 
@@ -32,18 +36,21 @@ RES = 112
 DEFAULT_POOL = 8
 
 
-def run(simulate: bool = False, pool: Optional[int] = None,
-        cache: bool = True) -> List[Dict]:
+def run(simulate: Optional[bool] = None, pool: Optional[int] = None,
+        cache: bool = True, fidelity: str = "trace",
+        calibration: Optional[str] = None) -> List[Dict]:
+    if simulate is not None:            # legacy boolean knob
+        fidelity = "simulate" if simulate else "analytic"
     pool = DEFAULT_POOL if pool is None else pool
     space = mg_flit_space(SWEEP_MG, SWEEP_FLIT, strategies=STRATEGIES)
     rows: List[Dict] = []
     for model in MODELS:
         eng = ExplorationEngine(model, res=RES,
                                 params=CostParams(batch=4), pool=pool,
+                                calibration=calibration,
                                 cache=default_cache_dir() if cache
                                 else None)
-        recs = eng.sweep(space,
-                         fidelity="simulate" if simulate else "analytic")
+        recs = eng.sweep(space, fidelity=fidelity)
         rows.extend(r.row() for r in recs)
     return rows
 
@@ -60,7 +67,8 @@ def _rows_to_records(rows: List[Dict]) -> List[EvalRecord]:
                               local_mem_kb=r["lmem_kb"],
                               strategy=r["strategy"]),
             model=r["model"],
-            fidelity="simulate" if r["simulated"] else "analytic",
+            fidelity=r.get("fidelity",
+                           "simulate" if r["simulated"] else "analytic"),
             cycles=r["cycles"], throughput_sps=r["throughput_sps"],
             energy={"total": r["energy_total_mJ"] * 1e6},
             error=r.get("error"))
@@ -102,13 +110,20 @@ def report(rows: List[Dict]) -> str:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fidelity", default="trace",
+                    choices=("analytic", "trace", "simulate"),
+                    help="evaluation fidelity (default: trace)")
+    ap.add_argument("--calibration", default=None,
+                    help="named calibration preset for cheap fidelities "
+                         "(results/calibrations/<name>.json)")
     ap.add_argument("--simulate", action="store_true",
-                    help="cycle-accurate simulator instead of the "
-                         "analytic model")
+                    help="legacy alias for --fidelity simulate")
     ap.add_argument("--pool", type=int, default=None,
                     help=f"worker processes (default {DEFAULT_POOL})")
     ap.add_argument("--no-cache", action="store_true",
                     help="bypass the on-disk result cache")
     args = ap.parse_args()
-    print(report(run(simulate=args.simulate, pool=args.pool,
-                     cache=not args.no_cache)))
+    print(report(run(pool=args.pool, cache=not args.no_cache,
+                     fidelity=("simulate" if args.simulate
+                               else args.fidelity),
+                     calibration=args.calibration)))

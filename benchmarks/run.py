@@ -34,13 +34,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="analytic cost model instead of the simulator")
+    ap.add_argument("--fidelity", default="trace",
+                    choices=("analytic", "trace", "simulate"),
+                    help="fig5/fig7 evaluation fidelity (default: "
+                         "trace — the calibratable middle rung; "
+                         "--quick forces analytic)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args(argv)
     simulate = not args.quick
+    fidelity = "analytic" if args.quick else args.fidelity
 
     print("name,us_per_call,derived")
 
-    rows = fig5_compilation.run(simulate=simulate)
+    rows = fig5_compilation.run(fidelity=fidelity)
     _save("fig5", rows)
     for r in rows:
         print(f"fig5.{r['model']}.{r['strategy']},"
@@ -58,7 +64,7 @@ def main(argv=None) -> int:
               f"compute_frac={r['energy_compute_frac']:.2f}")
     print(fig6_arch_sweep.report(rows), file=sys.stderr)
 
-    rows = fig7_codesign.run(simulate=False)
+    rows = fig7_codesign.run(fidelity=fidelity)
     _save("fig7", rows)
     for r in rows:
         print(f"fig7.{r['model']}.{r['strategy']}.mg{r['mg']}."

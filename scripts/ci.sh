@@ -24,8 +24,10 @@ python -m pytest -x -q
 echo "== benchmark smoke (analytic, no roofline) =="
 python -m benchmarks.run --quick --skip-roofline > /dev/null
 
-# the machine-model cycles gate (benchmarks/roofline.py --smoke) runs
-# as its own named CI job (machine-smoke in ci.yml) so a drift failure
-# is legible at a glance; run it here manually when iterating locally
+# the machine-model cycles gate (benchmarks/roofline.py --smoke) and
+# the simulator perf-trajectory gate (benchmarks/bench_sim.py --smoke)
+# run as their own named CI jobs (machine-smoke / bench-smoke in
+# ci.yml) so a drift failure is legible at a glance; run them here
+# manually when iterating locally
 
 echo "ci: OK"

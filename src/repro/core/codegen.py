@@ -605,6 +605,11 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
 
     for e in emitters.values():
         e.halt()
+        # ship the program with its pre-decoded SoA table: the
+        # vectorized simulator replays these columns directly, so the
+        # decode pass rides codegen (which is already lazy — analytic /
+        # trace evaluations never build programs at all)
+        e.prog.pack(isa)
     _validate_channels(emitters)
     over = [(c, seg, what) for c, lm in sorted(lmems.items())
             for seg, what in lm.overflows]

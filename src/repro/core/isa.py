@@ -36,6 +36,7 @@ __all__ = [
     "InstrDescriptor",
     "Instr",
     "Isa",
+    "PackedProgram",
     "Program",
     "default_isa",
     "VFUNCT",
@@ -127,6 +128,10 @@ class Isa:
         # use distinct fixed functs.
         self._by_code: Dict[Tuple[int, Optional[int]], InstrDescriptor] = {}
         self._opcode_fmt: Dict[int, str] = {}
+        # dense op numbering (registration order): the decode tables the
+        # pre-decoded simulator indexes with — unlike the sparse
+        # (opcode, funct) encoding space, ids are contiguous ints
+        self._index: Dict[str, int] = {}
 
     # -- registration --------------------------------------------------------
 
@@ -148,10 +153,33 @@ class Isa:
         self._by_name[d.name] = d
         self._by_code[key] = d
         self._opcode_fmt[d.opcode] = d.fmt
+        self._index[d.name] = len(self._index)
         return d
 
     def __contains__(self, name: str) -> bool:
         return name in self._by_name
+
+    # -- dense numbering / decode tables -------------------------------------
+
+    @property
+    def n_ops(self) -> int:
+        return len(self._index)
+
+    def op_id(self, name: str) -> int:
+        """Dense instruction id (registration order, 0..n_ops-1)."""
+        try:
+            return self._index[name]
+        except KeyError:
+            raise IsaError(f"unknown instruction {name!r}") from None
+
+    @property
+    def op_index(self) -> Dict[str, int]:
+        """name -> dense id map (a copy; ids are registration order)."""
+        return dict(self._index)
+
+    def op_names(self) -> List[str]:
+        """Dense-id -> name table (index i holds the name of op id i)."""
+        return list(self._index)
 
     def __getitem__(self, name: str) -> InstrDescriptor:
         try:
@@ -162,6 +190,53 @@ class Isa:
     @property
     def descriptors(self) -> List[InstrDescriptor]:
         return list(self._by_name.values())
+
+    def pack_streams(self, streams: Sequence[Sequence[Instr]]
+                     ) -> Tuple[np.ndarray, Dict[str, np.ndarray],
+                                np.ndarray]:
+        """Pack several instruction streams into one SoA table.
+
+        Returns ``(op, args, offs)`` where ``op``/``args`` cover the
+        concatenation of all streams and ``offs[k]`` is stream *k*'s
+        start (``offs[-1]`` = total length).  Extraction is grouped per
+        (op, operand) from each op's descriptor: one gather per pair
+        instead of a per-instruction dict walk.
+        """
+        from itertools import chain
+        from operator import attrgetter, itemgetter
+        sizes = [len(s) for s in streams]
+        n = int(sum(sizes))
+        offs = np.zeros(len(sizes) + 1, dtype=np.int64)
+        np.cumsum(sizes, out=offs[1:])
+        index = self._index
+        flat = list(chain.from_iterable(streams))
+        op = np.fromiter(map(index.__getitem__, map(attrgetter("op"),
+                                                    flat)),
+                         dtype=np.int32, count=n)  # KeyError -> unknown
+        argdicts = list(map(attrgetter("args"), flat))
+        names = list(self._index)
+        cols: Dict[str, np.ndarray] = {}
+        present = np.flatnonzero(np.bincount(op, minlength=len(names)))
+        for oid in present.tolist():
+            nm = names[oid]
+            cols_of = tuple(self._by_name[nm].operands)
+            if not cols_of:
+                continue
+            pos = np.flatnonzero(op == oid)
+            rows = list(map(argdicts.__getitem__, pos.tolist()))
+            try:
+                if len(cols_of) == 1:
+                    vals = (list(map(itemgetter(cols_of[0]), rows)),)
+                else:
+                    vals = list(zip(*map(itemgetter(*cols_of), rows)))
+            except KeyError:              # operand omitted somewhere
+                vals = [[r.get(k, 0) for r in rows] for k in cols_of]
+            for k, v in zip(cols_of, vals):
+                c = cols.get(k)
+                if c is None:
+                    c = cols[k] = np.zeros(n, dtype=np.int64)
+                c[pos] = v
+        return op, cols, offs
 
     def instr(self, op: str, **args: int) -> Instr:
         """Build + validate a symbolic instruction."""
@@ -227,6 +302,33 @@ class Isa:
 
 
 @dataclass
+class PackedProgram:
+    """Structure-of-arrays view of a :class:`Program`.
+
+    ``op`` holds dense instruction ids (:meth:`Isa.op_id`); ``args`` maps
+    each semantic operand name appearing anywhere in the stream to an
+    int64 column (0 where an instruction lacks the operand).  This is the
+    decode-once table the vectorized perf simulator replays — numpy
+    gather/compare over columns instead of per-``Instr`` dict traffic.
+    """
+
+    op: np.ndarray                       # (n,) int32 dense op ids
+    args: Dict[str, np.ndarray]          # operand name -> (n,) int64
+    core_id: int = 0
+
+    def __len__(self) -> int:
+        return int(self.op.size)
+
+    def col(self, name: str) -> np.ndarray:
+        """Operand column (a shared zeros column if never present)."""
+        got = self.args.get(name)
+        if got is None:
+            got = np.zeros(self.op.size, dtype=np.int64)
+            self.args[name] = got
+        return got
+
+
+@dataclass
 class Program:
     """An instruction stream for one core."""
 
@@ -249,6 +351,34 @@ class Program:
 
     def encode(self, isa: "Isa") -> np.ndarray:
         return np.array([isa.encode(i) for i in self.instrs], dtype=np.uint32)
+
+    def invalidate_pack(self) -> None:
+        """Drop the memoized :meth:`pack` table.
+
+        ``append``/``extend`` are covered by the cache's length check;
+        call this after replacing an instruction *in place*
+        (``prog.instrs[i] = ...``) so the vectorized simulator cannot
+        replay a stale table.
+        """
+        self.__dict__.pop("_packed", None)
+
+    def pack(self, isa: "Isa") -> PackedProgram:
+        """Decode the stream into :class:`PackedProgram` column arrays.
+
+        The result is memoized per ``Isa`` (invalidated by length
+        changes; see :meth:`invalidate_pack` for in-place edits) —
+        codegen ships every emitted program with its table, and the
+        simulator, the equivalence tests and any analysis pass share
+        that one decode.
+        """
+        cached = getattr(self, "_packed", None)
+        if cached is not None and cached[0] is isa \
+                and cached[2] == len(self.instrs):
+            return cached[1]
+        op, cols, _ = isa.pack_streams([self.instrs])
+        packed = PackedProgram(op=op, args=cols, core_id=self.core_id)
+        self._packed = (isa, packed, len(self.instrs))
+        return packed
 
     def disassemble(self, isa: "Isa") -> str:
         lines = []

@@ -35,6 +35,8 @@ from dataclasses import dataclass, replace
 from functools import lru_cache
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
+import numpy as np
+
 from .arch import ChipConfig
 from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
 
@@ -186,6 +188,43 @@ class MachineModel:
         if fn in VECTOR_MUL_FNS:
             return beats + v.mul_latency
         return beats + v.alu_latency
+
+    def vector_class(self, fn: str) -> int:
+        """Latency class id for :meth:`vector_cycles_array`:
+        0 = ALU, 1 = multiplier, 2 = LUT/special."""
+        if fn in VECTOR_SPECIAL_FNS:
+            return 2
+        if fn in VECTOR_MUL_FNS:
+            return 1
+        return 0
+
+    def vector_cycles_array(self, vclass: "Any", n: "Any") -> "Any":
+        """Batched :meth:`vector_cycles`: ``vclass`` int array (see
+        :meth:`vector_class`) and ``n`` element-count array -> float64
+        latencies.  One numpy pass for the pre-decoded simulator; the
+        arithmetic is kept element-identical to the scalar accessor."""
+        v = self.chip.core.vector
+        n = np.maximum(np.asarray(n, dtype=np.int64), 1)
+        beats = -(-n // v.lanes)          # ceil-div, exact in int64
+        lat = beats + np.where(vclass == 1, v.mul_latency, v.alu_latency)
+        return np.where(vclass == 2, beats * v.special_latency,
+                        lat).astype(np.float64)
+
+    def mvm_cycles_array(self, rep: "Any") -> "Any":
+        """Batched :meth:`mvm_cycles` over a ``rep`` array."""
+        rep = np.asarray(rep, dtype=np.int64)
+        return (rep * self.mvm_interval_beats
+                + self.mvm_fill_beats).astype(np.float64)
+
+    def weight_load_cycles_array(self, rows: "Any") -> "Any":
+        """Batched :meth:`weight_load_cycles` over a ``rows`` array."""
+        rows = np.asarray(rows, dtype=np.float64)
+        return rows / self.chip.core.cim.weight_load_rows_per_cycle
+
+    def send_issue_cycles_array(self, nbytes: "Any") -> "Any":
+        """Batched :meth:`send_issue_cycles` over a byte-count array."""
+        nbytes = np.asarray(nbytes, dtype=np.float64)
+        return np.maximum(1.0, nbytes / self.link_bytes_per_cycle)
 
     # ------------------------------------------------------------------
     # Scalar unit

@@ -24,6 +24,15 @@ Models the chip at instruction granularity:
 The simulator executes each *stage*'s programs to completion (all cores
 HALT) and sums stage makespans — the sequential-stage execution model the
 partitioner optimizes for.
+
+Perf mode runs on the pre-decoded vectorized engine by default
+(:mod:`repro.core.vectorsim`): programs decode once into numpy tables,
+basic blocks replay as unit-run sums, and only the shared-state
+instructions (SEND / RECV / GLD / GST / SYNC / HALT) execute through the
+scheduler — cycle-, event- and busy-identical to this interpreter at a
+fraction of the wall time (see ``benchmarks/bench_sim.py``).  The
+``engine`` parameter pins a path explicitly; functional mode always
+interprets.
 """
 
 from __future__ import annotations
@@ -34,13 +43,21 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import vectorsim
 from .arch import ChipConfig
 from .codegen import GMEM_BASE, CompiledModel, StageProgram
 from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
 from .isa import FLAGS, Instr, Isa, Program, SREG, VFUNCT
 from .machine import MachineModel, machine_for
 
-__all__ = ["Simulator", "SimReport", "SimError"]
+__all__ = ["Simulator", "SimReport", "SimError", "ENGINES"]
+
+# Perf-mode execution engines: "vector" replays pre-decoded basic blocks
+# (see :mod:`repro.core.vectorsim`), "scalar" interprets one instruction
+# at a time, "auto" vectorizes when the program is statically decodable
+# and falls back to the interpreter otherwise.  ``mode="func"`` always
+# interprets (data semantics are inherently per-instruction).
+ENGINES = ("auto", "vector", "scalar")
 
 
 class SimError(RuntimeError):
@@ -108,9 +125,18 @@ class _Core:
         self.sregs[SREG["ACC_DIV"]] = 1
         self.unit_free: Dict[str, float] = {}
         self.mgs: Dict[int, _MgState] = {}
-        self.lmem: Optional[np.ndarray] = (
-            np.zeros(chip.core.local_mem.size_bytes, dtype=np.int8)
-            if func else None)
+        # functional-mode local memory is allocated lazily on first
+        # access: a core whose program never loads/stores (or a wide
+        # chip's mostly-idle cores) pays nothing
+        self._func = func
+        self._lmem_bytes = chip.core.local_mem.size_bytes
+        self._lmem: Optional[np.ndarray] = None
+
+    @property
+    def lmem(self) -> Optional[np.ndarray]:
+        if self._lmem is None and self._func:
+            self._lmem = np.zeros(self._lmem_bytes, dtype=np.int8)
+        return self._lmem
 
     def sreg(self, name: str) -> int:
         return int(self.sregs[SREG[name]])
@@ -123,15 +149,22 @@ class _Core:
 
 class Simulator:
     def __init__(self, chip: ChipConfig, isa: Isa, mode: str = "perf",
-                 max_cycles: float = 5e9) -> None:
+                 max_cycles: float = 5e9, engine: str = "auto") -> None:
         if mode not in ("perf", "func"):
             raise ValueError(mode)
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
+        if engine == "vector" and mode == "func":
+            raise ValueError("functional mode requires the scalar "
+                             "engine (engine='auto' or 'scalar')")
         self.chip = chip
         # the one source of timing/bandwidth/energy rules — shared with
         # the analytic cost model and the trace fidelity
         self.m: MachineModel = machine_for(chip)
         self.isa = isa
         self.func = mode == "func"
+        self.engine = engine
         self.max_cycles = max_cycles
         self._vfunct_names = {v: k for k, v in VFUNCT.items()}
 
@@ -149,8 +182,17 @@ class Simulator:
         busy: Dict[str, float] = {}
         stage_cycles: List[float] = []
         instrs = 0
+        vectorize = not self.func and self.engine != "scalar"
         for sp in model.stages:
-            c, ev, bz, n = self._run_stage(sp, gmem)
+            out = vectorsim.run_stage(self, sp) if vectorize else None
+            if out is None:
+                if self.engine == "vector":
+                    raise SimError(
+                        "engine='vector': stage program is not "
+                        "statically decodable (branches / scalar-ALU "
+                        "register chains / custom ops)")
+                out = self._run_stage(sp, gmem)
+            c, ev, bz, n = out
             stage_cycles.append(c)
             instrs += n
             for k, v in ev.items():
@@ -200,6 +242,9 @@ class Simulator:
     def _ev(self, key: str, amount: float) -> None:
         self._events[key] = self._events.get(key, 0.0) + amount
 
+    # NOTE: _use/_route_delay/_gmem_xfer have line-for-line ports in
+    # repro.core.vectorsim (boundary handlers) — keep them in sync or
+    # the engines diverge on shapes outside the pinned goldens.
     def _use(self, core: _Core, unit: str, latency: float) -> float:
         """Issue on a unit: in-order issue, decoupled unit pipelines."""
         t_issue = max(core.time + 1.0, core.unit_free.get(unit, 0.0))

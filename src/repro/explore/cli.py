@@ -88,7 +88,8 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
         pool=args.pool,
         cache=None if args.no_cache else (args.cache_root
                                           or default_cache_dir()),
-        store=args.store, flow_cache=args.flow_cache, **kw)
+        store=args.store, flow_cache=args.flow_cache,
+        calibration=getattr(args, "calibration", None), **kw)
     print(f"sweeping {args.model}: {space.describe()}")
     if args.top_k:
         result, screened = successive_halving(
@@ -177,6 +178,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="[with --top-k] fit per-unit correction "
                          "factors from N simulator runs before the "
                          "deciding screen")
+    sw.add_argument("--calibration", default=None,
+                    help="named calibration preset to start from "
+                         "(results/calibrations/<name>.json, written "
+                         "by flow.calibrate(..., save=name))")
     sw.add_argument("--flow-cache", default=None,
                     help="directory for the persistent flow "
                          "pass-output cache (shared by pool workers)")

@@ -187,7 +187,9 @@ class ExplorationEngine:
     calibration:
         Per-unit correction factors applied to cheap fidelities
         (analytic / trace) and mixed into every cache key.  Fit one
-        with :meth:`calibrate` or :func:`repro.flow.calibrate`.
+        with :meth:`calibrate` or :func:`repro.flow.calibrate`; a
+        string names a saved preset (``results/calibrations/*.json``,
+        written by ``flow.calibrate(..., save=name)``).
     flow_cache:
         Directory for the :mod:`repro.flow` *pass-output* disk cache
         (distinct from ``cache``, which stores finished evaluation
@@ -201,7 +203,7 @@ class ExplorationEngine:
                  cache: Union[ResultCache, str, None] = None,
                  store: Union[RecordStore, str, None] = None,
                  fidelity: str = "analytic",
-                 calibration: Optional[Calibration] = None,
+                 calibration: Union[Calibration, str, None] = None,
                  flow_cache: Optional[str] = None,
                  **workload_kw: Any) -> None:
         # validate eagerly: an unknown model raising inside a pool
@@ -214,6 +216,8 @@ class ExplorationEngine:
         self.params = params or CostParams(batch=4)
         self.pool = int(pool)
         self.fidelity = fidelity
+        if isinstance(calibration, str):
+            calibration = flow.load_calibration(calibration)
         self.calibration = calibration
         self.flow_cache = flow_cache
         if flow_cache:

@@ -97,6 +97,7 @@ class EvalRecord:
                for k in _ENERGY_KEYS},
             "simulated": self.simulated,
             # extras beyond the legacy schema
+            "fidelity": self.fidelity,
             "n_mg": self.point.n_macro_groups,
             "cores": self.point.n_cores,
             "lmem_kb": self.point.local_mem_kb,

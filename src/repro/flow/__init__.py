@@ -37,7 +37,9 @@ from .backends import (BACKENDS, AnalyticBackend, Backend, EvalReport,
                        SimulatorBackend, TraceBackend,
                        backend_for_fidelity, register_backend,
                        resolve_backend)
-from .calibrate import CalibrationReport, CalibrationRow, calibrate
+from .calibrate import (CalibrationReport, CalibrationRow, calibrate,
+                        calibration_dir, list_calibrations,
+                        load_calibration, save_calibration)
 from .diskcache import PassDiskCache
 from .options import FIDELITIES, CompileOptions
 from .passes import (PASS_REGISTRY, CodegenPass, CondensePass, Pass,
@@ -56,5 +58,7 @@ __all__ = [
     "SimulatorBackend", "BACKENDS", "register_backend",
     "resolve_backend", "backend_for_fidelity",
     "calibrate", "CalibrationReport", "CalibrationRow",
+    "calibration_dir", "save_calibration", "load_calibration",
+    "list_calibrations",
     "Calibration", "MachineModel", "machine_for", "PassDiskCache",
 ]

@@ -32,7 +32,7 @@ from typing import Any, Dict, Optional, Union
 import numpy as np
 
 from ..core.machine import machine_for
-from ..core.simulator import SimReport, Simulator
+from ..core.simulator import ENGINES, SimReport, Simulator
 from ..core.trace import TraceEngine, TraceReport
 
 __all__ = ["EvalReport", "Backend", "AnalyticBackend", "TraceBackend",
@@ -130,27 +130,45 @@ class TraceBackend(Backend):
 
 
 class SimulatorBackend(Backend):
-    """Cycle-accurate (``perf``) / functional ISS (``func``) execution."""
+    """Cycle-accurate (``perf``) / functional ISS (``func``) execution.
+
+    ``engine`` selects the perf-mode execution path: ``"auto"``
+    (default) replays pre-decoded basic blocks on the vectorized engine
+    and falls back to the scalar interpreter for programs outside its
+    static subset; ``"scalar"`` forces the interpreter, ``"vector"``
+    forbids the fallback.  Both paths are cycle- and event-identical
+    (pinned by ``tests/test_vectorsim.py``); an ``engine=...`` keyword
+    on ``evaluate`` overrides per call.
+    """
 
     requires_model = True
 
-    def __init__(self, mode: str = "perf",
-                 name: Optional[str] = None) -> None:
+    def __init__(self, mode: str = "perf", name: Optional[str] = None,
+                 engine: str = "auto") -> None:
         if mode not in ("perf", "func"):
             raise ValueError(f"mode must be 'perf' or 'func', "
                              f"got {mode!r}")
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
         self.mode = mode
+        self.engine = engine
         self.name = name or ("simulate" if mode == "perf" else "func")
 
     def evaluate(self, artifact: Any,
                  gmem_image: Optional[np.ndarray] = None,
+                 engine: Optional[str] = None,
                  **kw: Any) -> EvalReport:
         if kw:
-            raise TypeError(f"simulator backend takes only gmem_image, "
-                            f"got {sorted(kw)}")
+            raise TypeError(f"simulator backend takes only gmem_image "
+                            f"and engine, got {sorted(kw)}")
         t0 = time.perf_counter()
         model = artifact.ensure_model()
-        sim = Simulator(artifact.chip, model.isa, mode=self.mode)
+        # pass the engine through unchanged: Simulator itself rejects
+        # func+vector and unknown engines, so an explicit override is
+        # never silently ignored
+        sim = Simulator(artifact.chip, model.isa, mode=self.mode,
+                        engine=engine or self.engine)
         rep = sim.run_model(model, gmem_image=gmem_image)
         batch = model.batch
         return EvalReport(

@@ -24,7 +24,9 @@ with simulator-faithful rankings.
 
 from __future__ import annotations
 
+import json
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -35,7 +37,74 @@ from ..core.partition import PartitionResult
 from .options import CompileOptions
 
 __all__ = ["CalibrationRow", "CalibrationReport", "calibrate",
-           "analytic_unit_cycles"]
+           "analytic_unit_cycles", "calibration_dir", "save_calibration",
+           "load_calibration", "list_calibrations"]
+
+# Named calibration presets: ``flow.calibrate(..., save="name")`` writes
+# ``results/calibrations/<name>.json`` and
+# ``CompileOptions(calibration="name")`` loads it back — so a fit paid
+# once (a handful of simulator runs) rides along to later sessions,
+# benchmark drivers and explore sweeps by name.
+ENV_CALIB_DIR = "REPRO_CALIB_DIR"
+# anchored to the repo root (like the committed bench goldens), not the
+# CWD — presets must resolve no matter where the process was launched
+DEFAULT_CALIB_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))),
+    "results", "calibrations")
+
+
+def calibration_dir(directory: Optional[str] = None) -> str:
+    return (directory or os.environ.get(ENV_CALIB_DIR)
+            or DEFAULT_CALIB_DIR)
+
+
+def _preset_path(name: str, directory: Optional[str] = None) -> str:
+    if name.endswith(".json") or os.sep in name:
+        return name                     # explicit path passes through
+    return os.path.join(calibration_dir(directory), f"{name}.json")
+
+
+def save_calibration(calib: Calibration, name: str,
+                     directory: Optional[str] = None,
+                     meta: Optional[Dict[str, Any]] = None) -> str:
+    """Persist a fitted :class:`Calibration` as a named preset."""
+    path = _preset_path(name, directory)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    doc = {"name": os.path.splitext(os.path.basename(path))[0],
+           "calibration": calib.to_dict()}
+    if meta:
+        doc.update(meta)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_calibration(name: str,
+                     directory: Optional[str] = None) -> Calibration:
+    """Load a named preset (or an explicit ``*.json`` path)."""
+    path = _preset_path(name, directory)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        have = list_calibrations(directory)
+        hint = (", ".join(have) if have
+                else "none — fit one with flow.calibrate(..., save=name)")
+        raise FileNotFoundError(
+            f"no calibration preset {name!r} at {path} "
+            f"(available: {hint})") from None
+    return Calibration.from_dict(doc["calibration"])
+
+
+def list_calibrations(directory: Optional[str] = None) -> List[str]:
+    d = calibration_dir(directory)
+    try:
+        return sorted(os.path.splitext(f)[0] for f in os.listdir(d)
+                      if f.endswith(".json"))
+    except FileNotFoundError:
+        return []
 
 
 def analytic_unit_cycles(res: PartitionResult,
@@ -136,7 +205,8 @@ def calibrate(workloads: Sequence[Workload], chip: ChipConfig,
               params: Optional[CostParams] = None,
               batch: Optional[int] = None,
               fidelity: str = "analytic",
-              pipeline: Any = None) -> CalibrationReport:
+              pipeline: Any = None,
+              save: Optional[str] = None) -> CalibrationReport:
     """Fit a :class:`Calibration` for ``fidelity`` on ``chip``.
 
     ``workloads`` is a handful of calibration models — names,
@@ -145,6 +215,11 @@ def calibrate(workloads: Sequence[Workload], chip: ChipConfig,
     small geometries (``res=64``/``112``) — per-unit ratios transfer to
     the full-size models because the *mechanism* (im2col gather cost,
     handoff serialization) is geometry-independent.
+
+    ``save`` persists the fit as a named preset
+    (``results/calibrations/<save>.json``; see :func:`save_calibration`)
+    that ``CompileOptions(calibration="<save>")`` and
+    ``ExplorationEngine(calibration="<save>")`` load by name.
     """
     if fidelity not in ("analytic", "trace"):
         raise ValueError(f"calibrate fits 'analytic' or 'trace', "
@@ -201,5 +276,13 @@ def calibrate(workloads: Sequence[Workload], chip: ChipConfig,
     calib = unit_calib.scaled(makespan=_geomean(resid))
     for row, cyc in zip(rows, partial):
         row.calibrated_cycles = cyc * calib.makespan
-    return CalibrationReport(calibration=calib, fidelity=fidelity,
-                             rows=rows)
+    report = CalibrationReport(calibration=calib, fidelity=fidelity,
+                               rows=rows)
+    if save:
+        save_calibration(
+            calib, save,
+            meta={"fidelity": fidelity, "chip": chip.name,
+                  "strategy": strategy,
+                  "workloads": [r.workload for r in rows],
+                  "band": round(report.max_ratio(True), 4)})
+    return report

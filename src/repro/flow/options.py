@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.codegen import QuantParams
 from ..core.machine import Calibration
@@ -50,13 +50,20 @@ class CompileOptions:
     dump_dir: Optional[str] = None    # per-pass JSON IR dumps (debugging)
     # per-unit correction factors applied by the analytic and trace
     # backends at evaluation time (fit via repro.flow.calibrate); the
-    # partition search itself stays uncalibrated and cache-shared
-    calibration: Optional[Calibration] = None
+    # partition search itself stays uncalibrated and cache-shared.
+    # A string names a saved preset (results/calibrations/<name>.json,
+    # written by flow.calibrate(..., save=name)) and is resolved to the
+    # Calibration it holds at construction time.
+    calibration: Union[Calibration, str, None] = None
 
     def __post_init__(self) -> None:
         if self.fidelity not in FIDELITIES:
             raise ValueError(f"fidelity must be one of {FIDELITIES}, "
                              f"got {self.fidelity!r}")
+        if isinstance(self.calibration, str):
+            from .calibrate import load_calibration    # late: cycle
+            object.__setattr__(self, "calibration",
+                               load_calibration(self.calibration))
         if self.batch is not None and self.batch < 1:
             raise ValueError(f"batch must be >= 1, got {self.batch}")
         if self.quant is not None and not isinstance(self.quant, tuple):

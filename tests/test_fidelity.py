@@ -2,7 +2,8 @@
 
 Pins the documented ratio bands of the fidelity ladder on the golden
 workloads (tiny_cnn, resnet18@112), asserts the trace fidelity's
-contract (within 2x of perf cycles, >= 20x faster, no codegen), and
+contract (within 2x of perf cycles, still several times faster than
+even the vectorized perf engine, no codegen), and
 encodes the calibration gap test: calibrated analytic screening must
 rank the fig6 arch sweep like the simulator does (top-3 agreement).
 """
@@ -34,7 +35,10 @@ GOLDEN = (
 # but never by more than ~13x here; trace / perf stays within [1/2, 2].
 ANALYTIC_BAND = (1.0, 16.0)
 TRACE_BAND = (0.5, 2.0)
-TRACE_MIN_SPEEDUP = 20.0
+# trace vs the *vectorized* perf engine (PR 4 closed most of the old
+# 40-290x interpreter gap; ~10x remains on resnet18@112/dp, asserted
+# loosely so CI timing noise cannot flake the suite)
+TRACE_MIN_SPEEDUP = 4.0
 
 
 @pytest.fixture(scope="module")
@@ -298,3 +302,81 @@ def test_engine_trace_fidelity_and_halving(tmp_path, monkeypatch):
     finally:
         pipe.disk = prev_disk
         monkeypatch.delenv(ENV_VAR, raising=False)
+
+
+# ---------------------------------------------------------------------------
+# named calibration presets (flow.calibrate(..., save=...) round trip)
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_preset_roundtrip(tmp_path, monkeypatch, chip):
+    from repro.flow import (list_calibrations, load_calibration,
+                            save_calibration)
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path))
+    calib = Calibration(cim=1.5, vector=2.0, makespan=1.1)
+    path = save_calibration(calib, "unit-test",
+                            meta={"chip": chip.name})
+    assert path.endswith("unit-test.json")
+    assert list_calibrations() == ["unit-test"]
+    assert load_calibration("unit-test") == calib
+    # CompileOptions resolves the name at construction time
+    opts = CompileOptions(params=CostParams(batch=2),
+                          calibration="unit-test")
+    assert opts.calibration == calib
+    # and the engine accepts the name too
+    from repro.explore import ExplorationEngine
+    eng = ExplorationEngine("tiny_cnn", params=CostParams(batch=2),
+                            calibration="unit-test")
+    assert eng.calibration == calib
+    with pytest.raises(FileNotFoundError, match="no calibration preset"):
+        load_calibration("missing-preset")
+
+
+def test_calibrate_save_writes_preset(tmp_path, monkeypatch, chip):
+    monkeypatch.setenv("REPRO_CALIB_DIR", str(tmp_path))
+    rep = flow.calibrate(["tiny_cnn"], chip,
+                         params=CostParams(batch=2), save="tiny-fit")
+    got = flow.load_calibration("tiny-fit")
+    assert got == rep.calibration
+    import json
+    with open(tmp_path / "tiny-fit.json") as f:
+        doc = json.load(f)
+    assert doc["fidelity"] == "analytic"
+    assert doc["workloads"] == ["tiny_cnn"]
+
+
+# ---------------------------------------------------------------------------
+# trace smoke: transformer-style dynamic-weight workload
+# ---------------------------------------------------------------------------
+
+
+def test_trace_transformer_smoke(chip):
+    """The trace fidelity covers dynamic-weight attention matmuls that
+    codegen cannot lower yet (ROADMAP follow-up) — pin that it replays
+    a transformer block end-to-end with sane, ladder-ordered costs."""
+    opts = CompileOptions(
+        params=CostParams(batch=2),
+        workload_kw={"n_layers": 1, "d_model": 128, "n_heads": 4,
+                     "seq": 16})
+    art = flow.compile("transformer", chip, opts)
+    ana = art.evaluate("analytic")
+    tr = art.evaluate("trace")
+    assert tr.backend == "trace"
+    assert tr.trace is not None and tr.trace.n_events > 0
+    assert tr.cycles > 0 and tr.energy_total > 0
+    # no codegen: the replay never lowered to ISA programs
+    assert art.model is None
+    # ladder ordering: trace adds serialization the analytic model
+    # idealizes away
+    assert tr.cycles >= ana.cycles
+
+
+def test_committed_default_presets_resolve(monkeypatch, tmp_path):
+    # the repo ships default-chip presets; the default directory is
+    # anchored to the repo root, so they must load from any CWD
+    monkeypatch.delenv("REPRO_CALIB_DIR", raising=False)
+    monkeypatch.chdir(tmp_path)
+    for name in ("default-chip-analytic", "default-chip-trace"):
+        c = flow.load_calibration(name)
+        assert c.makespan > 0
+    assert "default-chip-trace" in flow.list_calibrations()
