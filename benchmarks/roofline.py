@@ -27,6 +27,9 @@ DRYRUN = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
 SMOKE_WORKLOADS = (
     ("tiny_cnn", {}),
     ("resnet18", {"res": 112}),
+    # dynamic-weight attention: analytic/trace weight-source costing
+    ("transformer", {"n_layers": 1, "d_model": 128, "n_heads": 4,
+                     "seq": 16, "vocab": 64}),
 )
 SMOKE_STRATEGIES = ("generic", "dp")
 SMOKE_GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),

@@ -32,12 +32,25 @@ perf-mode models may logically exceed a segment, which leaves timing
 unaffected (the simulator prices transfer sizes and repetition counts; a
 production backend would ring-buffer rows with identical traffic).
 
+Weight sources (see :mod:`repro.core.graph`): ``static`` tiles GLD a
+gmem blob and CIM_LOAD it in the stage prologue; ``streamed`` tiles
+repeat that inside the sample loop, cycling the group's own slot range
+(above any co-residents on a time-shared core); ``dynamic`` tiles have
+no gmem blob at all — the weight operand is a predecessor group's
+activations, RECV'd (or GLD'd across a stage boundary) into a ``wsrc``
+buffer and gather-transposed into the CIM write layout
+(:func:`repro.core.vecsem.dynamic_weight_matrix`) by strided ``V_MOV``
+before every per-sample ``CIM_LOAD``.  Fused ``softmax`` / ``layernorm``
+/ ``gelu`` tails lower to the row-segment vector ops whose integer
+semantics live in :mod:`repro.core.vecsem`.
+
 Limitations (documented): ``avgpool`` as a fused op is not generated
-(none of the paper's benchmarks use it outside GAP); multi-round weight
-streaming requires single-chunk groups (true for the oversized FC layers
-that trigger it); non-affine activations (silu/sigmoid/...) execute on the
-vector unit's LUT path — timing is modeled, functional simulation rejects
-them (the paper's INT8 benchmarks are relu-family in our graph builders).
+(none of the paper's benchmarks use it outside GAP); *static*
+multi-round weight streaming requires single-chunk groups (true for the
+oversized FC layers that trigger it; the dynamic path re-loads per
+chunk instead); other non-affine activations (silu/sigmoid/...)
+execute on the vector unit's LUT path — timing is modeled, functional
+simulation rejects them.
 """
 
 from __future__ import annotations
@@ -437,6 +450,37 @@ def _side_pre_reduce(sched: OpSchedule) -> bool:
     return si is not None and ri is not None and si < ri
 
 
+# fused ops applied as int8 row-segment tails after the residual side
+# op (integer semantics shared with the oracle via repro.core.vecsem)
+SPECIAL_TAIL_OPS = ("softmax", "layernorm", "gelu")
+
+
+def _validate_special_tail(sched: OpSchedule) -> None:
+    """Codegen applies softmax/layernorm/gelu last, on the assembled
+    int8 output rows — reject fusion orders that contract can't honor."""
+    vo = sched.vector_ops
+    sp = [i for i, v in enumerate(vo) if v in SPECIAL_TAIL_OPS]
+    if not sp:
+        return
+    if sched.pool is not None or sched.gap:
+        raise CodegenError(
+            f"{sched.name}: fused {vo[sp[0]]} cannot combine with "
+            f"pooling/GAP")
+    side = [i for i, v in enumerate(vo) if v in ("add", "mul")]
+    if side and min(sp) < max(side):
+        raise CodegenError(
+            f"{sched.name}: fused {vo[min(sp)]} precedes a residual "
+            f"add/mul — unsupported fusion order")
+    # everything after the first special must itself be a special tail
+    # (codegen emits nothing else back there — e.g. a trailing relu
+    # would be silently dropped and diverge from the oracle)
+    trailing = [v for v in vo[min(sp):] if v not in SPECIAL_TAIL_OPS]
+    if trailing:
+        raise CodegenError(
+            f"{sched.name}: fused {trailing[0]!r} follows "
+            f"{vo[min(sp)]} — unsupported fusion order")
+
+
 def _relu_after_side(sched: OpSchedule) -> bool:
     vo = list(sched.vector_ops)
     if "relu" not in vo:
@@ -459,17 +503,34 @@ def _side_rows(cg: CondensedGraph, sched: OpSchedule,
     return o0, o1, row_nb
 
 
+def _weight_pred(cg: CondensedGraph, g: Group,
+                 op_owner: Dict[int, int]) -> Optional[int]:
+    """Weight-producer group of a dynamic-weight anchor (None for static
+    groups and for dynamic weights sourced from the graph input)."""
+    if not g.dynamic_weights or g.anchor is None or cg.source is None:
+        return None
+    anchor = cg.source.ops[g.anchor]
+    if len(anchor.inputs) < 2:
+        return None
+    return op_owner.get(anchor.inputs[1])
+
+
 def _main_and_skip_preds(cg: CondensedGraph, g: Group,
                          op_owner: Dict[int, int]) -> Tuple[Optional[int],
                                                             List[int]]:
-    """Main (im2col source) pred group vs side (residual) pred groups."""
+    """Main (im2col source) pred group vs side (residual) pred groups.
+
+    A dynamic-weight anchor's second input is its *weight* operand, not
+    a residual — it is excluded here and routed by the weight path."""
     main: Optional[int] = None
     if g.anchor is not None and cg.source is not None:
         src_op = cg.source.ops[g.anchor].inputs[0]
         main = op_owner.get(src_op)      # None => graph input
     elif g.preds:
         main = g.preds[0]
-    side = [p for p in g.preds if p != main]
+    wp = _weight_pred(cg, g, op_owner)
+    side = [p for p in g.preds if p != main
+            and not (g.dynamic_weights and p == wp)]
     return main, side
 
 
@@ -548,20 +609,28 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
     by_gid = {s.gid: s for s in schedules}
     member = set(sp.gids)
 
-    # gmem allocation: weight blobs + boundary activation buffers
+    # gmem allocation: weight blobs (static sources only — dynamic
+    # weights are activations, they never materialize in gmem) +
+    # boundary activation buffers
     for sched in schedules:
-        for a in sched.replicas[0].assigns:
-            key = (sched.gid, a.k_off, a.n_off, a.ch_off)
-            if key not in layout.weights:
-                nb = a.k_len * a.n_len
-                layout.weights[key] = (layout.alloc(nb), nb)
+        if sched.weight_source != "dynamic":
+            for a in sched.replicas[0].assigns:
+                key = (sched.gid, a.k_off, a.n_off, a.ch_off)
+                if key not in layout.weights:
+                    nb = a.k_len * a.n_len
+                    layout.weights[key] = (layout.alloc(nb), nb)
         if "bias" in sched.vector_ops and sched.gid not in layout.biases:
             nb = sched.n_total * 4
             layout.biases[sched.gid] = (layout.alloc(nb), nb)
-        if sched.n_rounds > 1 and sched.n_chunks > 1:
+        if sched.n_rounds > 1 and sched.n_chunks > 1 \
+                and sched.weight_source != "dynamic":
+            # the dynamic path re-loads weights per (chunk, round) from
+            # local memory instead; gmem-streamed groups would re-fetch
+            # the whole blob per chunk, which we refuse to emit
             raise CodegenError(
                 f"{sched.name}: multi-round weight streaming requires a "
                 f"single m-chunk (got {sched.n_chunks})")
+        _validate_special_tail(sched)
     for sched in schedules:
         g = cg[sched.gid]
         consumers = [h for h in cg if g.idx in h.preds]
@@ -592,9 +661,19 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
                member=member, by_gid=by_gid, op_owner=op_owner, em=em,
                batch=batch)
 
-    # 1. weight prologue (round 0; later rounds stream inside the loop)
+    # 1. weight prologue (round 0; later rounds stream inside the loop).
+    # Dynamic groups have no prologue — their weights are per-sample
+    # activations — but any static bias blob still loads here.
     for sched in schedules:
         for rep in sched.replicas:
+            if sched.weight_source == "dynamic":
+                if "bias" in sched.vector_ops \
+                        and sched.gid in layout.biases:
+                    addr, nb = layout.biases[sched.gid]
+                    bb = bufs[(sched.gid, rep.replica)]
+                    for c in rep.cores:
+                        em(c).gld(bb["bias"][c], addr, nb)
+                continue
             _emit_weight_load(ctx, sched, rep, rnd=0)
 
     # 2. unrolled sample loop, groups in topological order
@@ -680,20 +759,27 @@ def _plan_buffers(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
     for c in rep.cores:
         em(c)                                      # materialize lmem
     out: Dict = {"in": {}, "stage": {}, "wstage": {}, "psum": {},
-                 "qtmp": {}, "bias": {}}
+                 "qtmp": {}, "bias": {}, "wsrc": {}}
     spec = sched.im2col
     r0, r1 = _needed_in_rows(cg, sched, rep,
                              spec.h if spec is not None else 0)
     in_nb = max(r1 - r0, 0) * _in_row_bytes(sched)
     out["in_row0"] = r0
+    w_nb = sched.w_rows * sched.w_row_bytes \
+        if sched.weight_source == "dynamic" else 0
     for c in rep.cores:
         out["in"][c] = lmems[c].alloc(0, in_nb, f"{tag} input")
+        if w_nb:
+            out["wsrc"][c] = lmems[c].alloc(0, w_nb, f"{tag} wsrc")
         out["stage"][c] = lmems[c].alloc(
             1, sched.m_chunk * sched.k_total if spec is not None else 0,
             f"{tag} im2col")
-        out["wstage"][c] = lmems[c].alloc(
-            1, chip.core.cim.macro.rows * chip.core.cim.group_n_out,
-            f"{tag} wstage")
+        # weight staging: sized to the largest tile actually loaded on
+        # this core (a full MG upper-bounds it, but time-shared stages
+        # pack many groups per core and the bound wastes segments)
+        wstage_nb = max((a.k_len * a.n_len for a in rep.assigns
+                         if a.core == c), default=0)
+        out["wstage"][c] = lmems[c].alloc(1, wstage_nb, f"{tag} wstage")
         out["psum"][c] = lmems[c].alloc(
             2, sched.m_chunk * sched.n_total * 4, f"{tag} psum")
         out["qtmp"][c] = lmems[c].alloc(
@@ -745,23 +831,65 @@ def _round_mask(rep: ReplicaPlan, core: int, rnd: int) -> int:
     return mask
 
 
+def _emit_weight_gather(ctx: _Ctx, sched: OpSchedule, b, e: _Emitter,
+                        a: MgAssign) -> None:
+    """Stage one dynamic tile: strided V_MOV gather of the weight
+    producer's activations (resident in ``wsrc``) into the dense
+    ``(k_len, n_len)`` CIM write layout of ``wstage`` — the in-memory
+    mirror of :func:`repro.core.vecsem.dynamic_weight_matrix`."""
+    g = ctx.cg[sched.gid]
+    wsrc = b["wsrc"][a.core]
+    wstage = b["wstage"][a.core]
+    C = sched.w_row_bytes
+    gk, gn = g.gemm_k, g.gemm_n
+    if a.ch_cnt > 1:
+        # block-diagonal tile: off-diagonal bytes must read as zero
+        e.vec("zero", wstage, 0, 0, vlen=a.k_len * a.n_len,
+              flags=FLAGS["i8"])
+        blocks = [(a.ch_off + ci, 0, gk, 0, gn, ci * gk, ci * gn)
+                  for ci in range(a.ch_cnt)]
+    else:
+        ch = a.ch_off
+        blocks = [(ch, a.k_off - ch * gk, a.k_len,
+                   a.n_off - ch * gn, a.n_len, 0, 0)]
+    for ch, k0, klen, n0, nlen, dr, dc in blocks:
+        dst = wstage + dr * a.n_len + dc
+        if sched.w_transpose:
+            # W[k, n] = wsrc[(n0 + n)·C + ch·gk + k0 + k]  (Q·Kᵀ)
+            e.vec("mov", dst, wsrc + n0 * C + ch * gk + k0, 0,
+                  vlen=nlen, rep=klen, seg_d=a.n_len, seg_a=1,
+                  stride_a=C, flags=FLAGS["i8"])
+        else:
+            # W[k, n] = wsrc[(k0 + k)·C + ch·gn + n0 + n]  (P·V)
+            e.vec("mov", dst, wsrc + k0 * C + ch * gn + n0, 0,
+                  vlen=nlen, rep=klen, seg_d=a.n_len, seg_a=C,
+                  flags=FLAGS["i8"])
+
+
 def _emit_weight_load(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
                       rnd: int) -> None:
     b = ctx.bufs[(sched.gid, rep.replica)]
+    dynamic = sched.weight_source == "dynamic"
     for a in rep.assigns:
         if a.round != rnd:
             continue
         e = ctx.em(a.core)
-        addr, nb = ctx.layout.weights[(sched.gid, a.k_off, a.n_off,
-                                       a.ch_off)]
-        e.gld(b["wstage"][a.core], addr, nb)
+        if dynamic:
+            _emit_weight_gather(ctx, sched, b, e, a)
+        else:
+            addr, nb = ctx.layout.weights[(sched.gid, a.k_off, a.n_off,
+                                           a.ch_off)]
+            e.gld(b["wstage"][a.core], addr, nb)
         e.sreg("MG_SEL", a.slot)
         e.sreg("MG_KOFF", a.k_off)
         e.sreg("MG_NOFF", a.n_off)
         e.greg(1, b["wstage"][a.core])
         e.sreg("MG_NLEN", a.n_len)
         e.raw("CIM_LOAD", mg=a.slot, src=1, rows=a.k_len)
-    if rnd == 0 and "bias" in sched.vector_ops \
+    # static bias rides round 0 of the (re)load; dynamic groups load it
+    # once in the stage prologue instead (their weights re-load every
+    # sample, the bias blob does not change)
+    if rnd == 0 and not dynamic and "bias" in sched.vector_ops \
             and sched.gid in ctx.layout.biases:
         addr, nb = ctx.layout.biases[sched.gid]
         for c in rep.cores:
@@ -847,21 +975,61 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
                                          (k1 - k0) * krow_nb)
         bcast_side = bcast_side or bcast
 
+    # ---- 1c. acquire dynamic weights (a predecessor's activations) ----------
+    dynamic = sched.weight_source == "dynamic"
+    if dynamic:
+        if spec is not None:
+            raise CodegenError(f"{g.name}: dynamic weights on a conv "
+                               f"anchor are not supported")
+        wgid = sched.weight_pred
+        w_nb = sched.w_rows * sched.w_row_bytes
+        if wgid is None or wgid not in ctx.member:
+            base, _ = (ctx.layout.inputs[s] if wgid is None
+                       else ctx.layout.acts[(wgid, s)])
+            for c in rep.cores:
+                ctx.em(c).gld(b["wsrc"][c], base, w_nb)
+        else:
+            prod = ctx.by_gid[wgid]
+            _, prnb, ptot = _out_geometry(cg, prod)
+            if prnb != sched.w_row_bytes or ptot != w_nb:
+                raise CodegenError(
+                    f"{g.name}: weight producer '{prod.name}' output "
+                    f"layout ({ptot}B rows of {prnb}) does not match "
+                    f"the weight operand ({w_nb}B rows of "
+                    f"{sched.w_row_bytes})")
+            for prep in prod.replicas:
+                p0, p1 = _owned_out_rows(cg, prod, prep)
+                if p1 <= p0:
+                    continue
+                for c in rep.cores:
+                    ctx.em(c).recv(b["wsrc"][c] + p0 * prnb,
+                                   prep.cores[0], (p1 - p0) * prnb,
+                                   tag=f"wgt:{g.name}@s{s}",
+                                   stream=_stream_id(wgid, g.idx, 5))
+
     # ---- 2. compute ------------------------------------------------------------
     y0, y1 = _conv_rows_to_compute(cg, sched, rep)
-    for rnd in range(sched.n_rounds):
-        # multi-round groups stream weights every sample: slots were left
-        # holding the previous sample's last round
-        if rnd > 0 or (sched.n_rounds > 1 and s > 0):
-            _emit_weight_load(ctx, sched, rep, rnd)
-        if spec is not None:
-            for y in range(y0, y1):
-                for x0 in range(0, spec.wo, sched.m_chunk):
-                    x1 = min(spec.wo, x0 + sched.m_chunk)
-                    _emit_conv_chunk(ctx, sched, rep, b, spec, y, x0, x1,
-                                     rnd, q, y0)
-        else:
-            _emit_linear_chunks(ctx, sched, rep, b, rnd, q)
+    if dynamic and sched.n_rounds > 1:
+        # weights change per sample AND exceed the free slots: re-gather
+        # and re-load per (chunk, round) from the resident wsrc — pure
+        # local-memory traffic, so the single-m-chunk restriction of the
+        # gmem-streamed path does not apply
+        _emit_linear_chunks_dynamic(ctx, sched, rep, b, q)
+    else:
+        for rnd in range(sched.n_rounds):
+            # multi-round groups stream weights every sample (slots were
+            # left holding the previous sample's last round); dynamic
+            # groups re-write their arrays every sample
+            if rnd > 0 or (sched.n_rounds > 1 and s > 0) or dynamic:
+                _emit_weight_load(ctx, sched, rep, rnd)
+            if spec is not None:
+                for y in range(y0, y1):
+                    for x0 in range(0, spec.wo, sched.m_chunk):
+                        x1 = min(spec.wo, x0 + sched.m_chunk)
+                        _emit_conv_chunk(ctx, sched, rep, b, spec, y, x0,
+                                         x1, rnd, q, y0)
+            else:
+                _emit_linear_chunks(ctx, sched, rep, b, rnd, q)
 
     # ---- 3. assembly (multi-core replicas) ------------------------------------
     if len(rep.cores) > 1:
@@ -916,6 +1084,23 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
     if has_side_op and not side_pre:
         apply_side(b["final"], o0, o1, out_row_nb)
 
+    # ---- 4b. fused special tails (softmax / layernorm / gelu) -----------------
+    # applied on the assembled int8 rows, in graph order after the
+    # residual (validated by _validate_special_tail); row-segment
+    # integer semantics shared with the oracle via repro.core.vecsem
+    for vop in sched.vector_ops:
+        if vop not in SPECIAL_TAIL_OPS or o1 <= o0:
+            continue
+        total = (o1 - o0) * out_row_nb
+        if vop == "gelu":
+            e.vec("gelu", b["final"], b["final"], 0, vlen=total,
+                  flags=FLAGS["i8"])
+            continue
+        # softmax normalizes per head-row segment; layernorm per row
+        seg = g.gemm_n if vop == "softmax" else sched.n_total
+        e.vec(vop, b["final"], b["final"], 0, vlen=seg,
+              rep=total // seg, seg_d=seg, seg_a=seg, flags=FLAGS["i8"])
+
     # ---- 5. deliver -------------------------------------------------------------
     consumers = [h for h in cg if g.idx in h.preds]
     boundary_out = (not consumers) or any(h.idx not in ctx.member
@@ -926,6 +1111,17 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
             continue
         cons = ctx.by_gid[h.idx]
         hmain, _ = _main_and_skip_preds(cg, h, ctx.op_owner)
+        if cons.weight_source == "dynamic" and cons.weight_pred == g.idx:
+            # this output IS the consumer's weight operand: every core
+            # of every consumer replica gathers tiles from it
+            if o1 > o0:
+                for crep in cons.replicas:
+                    for tc in crep.cores:
+                        e.send(tc, b["final"], (o1 - o0) * my_row_nb,
+                               tag=f"wgt:{g.name}->{h.name}@s{s}",
+                               stream=_stream_id(g.idx, h.idx, 5))
+            if hmain != g.idx:
+                continue
         for crep in cons.replicas:
             if hmain == g.idx:
                 # byte-range intersection (mirrors consumer acquisition)
@@ -1037,22 +1233,50 @@ def _emit_conv_chunk(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan, b,
                         last_round=(rnd == sched.n_rounds - 1))
 
 
+def _emit_linear_mvm(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan, b,
+                     c0: int, npos: int, rnd: int) -> None:
+    """One m-chunk's MVM burst on every core of the replica (shared by
+    the round-outer static path and the chunk-outer dynamic path)."""
+    K = sched.k_total
+    for c in rep.cores:
+        e = ctx.em(c)
+        e.mvm(b["psum"][c], b["in"][c] + (c0 - rep.m_lo) * K, rep=npos,
+              acc=(rnd > 0), mask=_round_mask(rep, c, rnd), seg_in=K,
+              seg_out=sched.n_total * 4)
+
+
 def _emit_linear_chunks(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
                         b, rnd: int, q: QuantParams) -> None:
     m0, m1 = rep.m_lo, rep.m_hi
-    K = sched.k_total
     for c0 in range(m0, m1, sched.m_chunk):
         c1 = min(m1, c0 + sched.m_chunk)
         npos = c1 - c0
-        for c in rep.cores:
-            e = ctx.em(c)
-            mask = _round_mask(rep, c, rnd)
-            e.mvm(b["psum"][c], b["in"][c] + (c0 - m0) * K, rep=npos,
-                  acc=(rnd > 0), mask=mask, seg_in=K,
-                  seg_out=sched.n_total * 4)
+        _emit_linear_mvm(ctx, sched, rep, b, c0, npos, rnd)
         _emit_postops_chunk(ctx, sched, rep, b, q, npos=npos,
                             out_off=(c0 - m0) * sched.n_total,
                             last_round=(rnd == sched.n_rounds - 1))
+
+
+def _emit_linear_chunks_dynamic(ctx: _Ctx, sched: OpSchedule,
+                                rep: ReplicaPlan, b,
+                                q: QuantParams) -> None:
+    """Dynamic multi-round emission: chunk-outer / round-inner.
+
+    Each m-chunk's INT32 partial sums accumulate across rounds before
+    post-ops run once, with the round's weights re-gathered from the
+    resident ``wsrc`` buffer — this is what lifts the static path's
+    "multi-round requires a single m-chunk" restriction for dynamic
+    weights (re-loading costs local-memory traffic only)."""
+    m0, m1 = rep.m_lo, rep.m_hi
+    for c0 in range(m0, m1, sched.m_chunk):
+        c1 = min(m1, c0 + sched.m_chunk)
+        npos = c1 - c0
+        for rnd in range(sched.n_rounds):
+            _emit_weight_load(ctx, sched, rep, rnd)
+            _emit_linear_mvm(ctx, sched, rep, b, c0, npos, rnd)
+        _emit_postops_chunk(ctx, sched, rep, b, q, npos=npos,
+                            out_off=(c0 - m0) * sched.n_total,
+                            last_round=True)
 
 
 def _core_columns(rep: ReplicaPlan, core: int) -> List[MgAssign]:

@@ -29,6 +29,10 @@ __all__ = [
     "Group",
     "CondensedGraph",
     "MVM_KINDS",
+    "WEIGHT_STATIC",
+    "WEIGHT_STREAMED",
+    "WEIGHT_DYNAMIC",
+    "WEIGHT_SOURCES",
 ]
 
 
@@ -38,6 +42,22 @@ class GraphError(ValueError):
 
 # Operator kinds that anchor a CIM group (executed on the CIM unit).
 MVM_KINDS = {"conv", "dwconv", "linear", "matmul"}
+
+# Weight-source abstraction, threaded through every layer of the stack:
+#
+# * ``static``   — CIM-resident weights, preloaded from global memory in
+#   the stage prologue (the classic CNN case);
+# * ``streamed`` — weights exceed the allocated MG slots and are
+#   re-loaded from global memory in multiple *rounds* per sample (a
+#   *mapping* outcome, discovered at op-level planning, never a graph
+#   property);
+# * ``dynamic``  — the weights are a predecessor operator's activations
+#   (attention Q·Kᵀ / P·V matmuls), written into macro groups at
+#   runtime from local memory, once per sample.
+WEIGHT_STATIC = "static"
+WEIGHT_STREAMED = "streamed"
+WEIGHT_DYNAMIC = "dynamic"
+WEIGHT_SOURCES = (WEIGHT_STATIC, WEIGHT_STREAMED, WEIGHT_DYNAMIC)
 
 # Vector-unit kinds and their per-element cost class (see VectorUnitConfig).
 VECTOR_KINDS = {
@@ -279,10 +299,19 @@ class Group:
     vector_work: Dict[str, int] = field(default_factory=dict)
     in_bytes: int = 0
     out_bytes: int = 0
+    # Graph-level weight source of the anchor: ``static`` (learned
+    # weights in gmem) or ``dynamic`` (weights are a predecessor op's
+    # activations).  ``streamed`` is a mapping outcome, never set here.
+    weight_source: str = WEIGHT_STATIC
+    transpose_weights: bool = False     # dynamic: W = producer outputᵀ
 
     @property
     def is_mvm(self) -> bool:
         return self.anchor is not None
+
+    @property
+    def dynamic_weights(self) -> bool:
+        return self.weight_source == WEIGHT_DYNAMIC
 
     @property
     def vector_elems(self) -> int:
@@ -423,7 +452,13 @@ class CondensedGraph:
                 act_bits=a.act_bits if a else 8,
                 weight_bytes=a.weight_bytes if a else 0,
                 macs=a.macs if a else 0, vector_work=vw,
-                in_bytes=in_bytes, out_bytes=out_bytes))
+                in_bytes=in_bytes, out_bytes=out_bytes,
+                weight_source=(WEIGHT_DYNAMIC
+                               if a is not None
+                               and a.attrs.get("dynamic_weights")
+                               else WEIGHT_STATIC),
+                transpose_weights=bool(
+                    a.attrs.get("transpose_weights")) if a else False))
         return CondensedGraph(g.name, out, source=g)
 
 

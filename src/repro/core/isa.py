@@ -404,6 +404,10 @@ VFUNCT: Dict[str, int] = {
     "rsqrt": 24, "abs": 25, "clip": 26,
     "zero": 27,     # write VLEN zeros (with V_REP/VSEG_D segments)
     "sum8": 28,     # int32 dst[i] += int8 a[i] (GAP accumulation)
+    # row-segment transformer ops: VLEN = segment length, V_REP = rows
+    # (int8 in/out; integer semantics in repro.core.vecsem)
+    "softmax": 29,
+    "layernorm": 30,
 }
 
 # Scalar ALU functs (shared S_ALU opcode).
@@ -488,7 +492,7 @@ def default_isa() -> Isa:
           funct=f,
           latency_class=("vec_special" if vname in
                          ("sigmoid", "silu", "gelu", "tanh", "exp",
-                          "recip", "rsqrt")
+                          "recip", "rsqrt", "softmax", "layernorm")
                          else "vec_mul" if vname in ("mul", "mac", "muli",
                                                      "dequant", "quant")
                          else "vec_alu"),

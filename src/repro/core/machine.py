@@ -52,7 +52,7 @@ __all__ = [
 # pay the multiplier latency; everything else is ALU-class.
 VECTOR_SPECIAL_FNS = frozenset(
     {"sigmoid", "silu", "gelu", "tanh", "exp", "recip", "rsqrt",
-     "softmax"})
+     "softmax", "layernorm"})
 VECTOR_MUL_FNS = frozenset({"mul", "mac", "muli", "quant", "dequant"})
 
 

@@ -88,9 +88,9 @@ def mg_tiles(g: Group, chip: ChipConfig) -> int:
     # ``ch`` conv-groups: their input patches concatenated along rows,
     # each group's outputs on its own columns.
     ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
-    if ch >= 1 and g.gemm_k <= rows:
+    if g.gemm_k <= rows and g.gemm_n <= n_out:
         return math.ceil(g.groups / ch) * math.ceil(g.gemm_n / n_out)
-    # giant grouped op: fall back to per-group tiling
+    # giant grouped op (per-group K or N exceeds one MG): per-group tiling
     tk = math.ceil(g.gemm_k / rows)
     tn = math.ceil(g.gemm_n / n_out)
     return g.groups * tk * tn
@@ -109,10 +109,21 @@ def column_geometry(g: Group, chip: ChipConfig) -> Tuple[int, int]:
         return (math.ceil(max(g.gemm_n, 1) / n_out),
                 max(1, math.ceil(g.gemm_k / rows)))
     ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
-    if g.gemm_k > rows:
+    if g.gemm_k > rows or g.gemm_n > n_out:
         return (g.groups * math.ceil(max(g.gemm_n, 1) / n_out),
                 math.ceil(g.gemm_k / rows))
     return math.ceil(g.groups / ch), 1
+
+
+def column_rows(g: Group, chip: ChipConfig) -> int:
+    """Weight rows of one n-column (the CIM_LOAD row count a core pays
+    per column when (re)writing its arrays — streamed/dynamic costing)."""
+    cim = chip.core.cim
+    rows, n_out = cim.macro.rows, cim.group_n_out
+    if g.groups == 1 or g.gemm_k > rows or g.gemm_n > n_out:
+        return max(g.gemm_k, 1)
+    ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
+    return min(ch, g.groups) * g.gemm_k
 
 
 def min_cores(g: Group, chip: ChipConfig) -> int:
@@ -147,6 +158,11 @@ class GroupAlloc:
     rounds: int                # weight-streaming rounds (oversized groups)
     percore_slots: int         # MG slots needed on each allocated core
     boundary_in: bool          # inputs come from global memory
+    # weight source of this allocation: "static" (gmem prologue),
+    # "streamed" (gmem re-stream, ``rounds`` per sample) or "dynamic"
+    # (a predecessor's activations, CIM-written every sample)
+    weight_source: str = "static"
+    col_slots: int = 1         # MG slots one n-column needs (placement)
     # per-sample cycle components (after duplication)
     compute: float = 0.0
     vector: float = 0.0
@@ -244,10 +260,13 @@ class StagePlan:
         m = self.machine
         total_bytes = sum(a.load_bytes for a in self.allocs)
         gmem = m.gmem_stream_cycles(total_bytes)
-        # array row writes happen in parallel across cores
+        # array row writes happen in parallel across cores; dynamic
+        # groups have no prologue (their weights are written per sample
+        # from a predecessor's activations — priced in the interval)
         per_core_tiles = max(
             (math.ceil(a.tiles / max(a.cores, 1)) * a.rounds
-             for a in self.allocs), default=0)
+             for a in self.allocs if a.weight_source != "dynamic"),
+            default=0)
         write = per_core_tiles * m.group_load_cycles()
         cycles = max(gmem, write)
         return cycles * calib.load if calib is not None else cycles
@@ -292,7 +311,13 @@ class StagePlan:
             # one pass activates `tiles` MGs = tiles*macros_per_group macros
             passes = g.gemm_m * b * a.tiles * m.macros_per_group
             ev["cim_macro_passes"] += passes
-            ev["cim_weight_load_bytes"] += a.load_bytes
+            if a.weight_source == "dynamic":
+                # macro arrays rewritten from activations every sample
+                ev["cim_weight_load_bytes"] += g.weight_bytes * a.dup * b
+            elif a.weight_source == "streamed":
+                ev["cim_weight_load_bytes"] += a.load_bytes * b
+            else:
+                ev["cim_weight_load_bytes"] += a.load_bytes
             ev["vector_elems"] += g.vector_elems * b
             halo = self.params.dup_halo if (g.gemm_m > 1 and a.dup > 1) \
                 else 0.0
@@ -352,14 +377,22 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
     chip_tiles = chip.n_cores * cim.n_macro_groups
     eff_tiles = min(tiles, chip_tiles)
     cores = min_cores(g, chip)
-    # weight-streaming rounds: per-core slot pressure at column granularity
+    # weight-streaming rounds: per-core slot pressure at column
+    # granularity.  Sized for the FULL slot range — when place_stage
+    # later time-shares the core, the op-level plan cycles more rounds
+    # through the smaller free range, so this is a (documented) lower
+    # bound for co-resident streamers; trace/perf price the real count.
     if tiles:
         ncol, colsz = column_geometry(g, chip)
         slots_needed = math.ceil(ncol / cores) * colsz
         rounds = max(1, math.ceil(slots_needed / cim.n_macro_groups))
     else:
+        ncol, colsz = 0, 1
         slots_needed = 0
         rounds = 1
+    source = g.weight_source if (g.is_mvm and tiles) else "static"
+    if source == "static" and rounds > 1:
+        source = "streamed"
 
     m_per_rep = math.ceil(g.gemm_m / dup) if g.gemm_m else 0
     compute = (m_per_rep * m.mvm_interval_beats * rounds
@@ -367,6 +400,21 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
 
     vector = g.vector_elems / (m.vector_lanes * max(cores, 1)) / dup if \
         g.vector_elems else 0.0
+
+    # per-round CIM array (re)writes: streamed and dynamic weights are
+    # written into macro groups *every sample*; a static group pays this
+    # once in the stage prologue (load_cycles) instead.  (Lower bound:
+    # the dynamic multi-round path additionally re-loads per m-chunk,
+    # which only op-level planning can see — trace prices it exactly.)
+    if source != "static":
+        rows_pc = math.ceil(ncol / cores) * column_rows(g, chip)
+        compute += m.weight_load_cycles(rows_pc)
+        if source == "dynamic":
+            # gather-transpose staging of the producer's activations
+            # into the CIM write layout (vector unit, per core)
+            w_elems = g.gemm_k * g.gemm_n * g.groups
+            vector += m.vector_cycles(
+                "mov", math.ceil(w_elems / max(cores, 1)))
 
     # Input delivery.  Replicas own disjoint spatial/batch slices: each
     # receives in_bytes/dup (+ conv halo) over its own mesh port, so the
@@ -384,16 +432,24 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
         comm += m.router_hop_cycles * m.avg_hops
     # output delivery to the next group / gmem, likewise port-parallel
     comm += g.out_bytes / (m.link_bytes_per_cycle * dup)
+    if source == "streamed":
+        # multi-round groups re-fetch their weights from gmem per sample
+        restream = m.gmem_stream_cycles(g.weight_bytes * dup)
+        comm_gmem += restream
+        comm += restream
 
     fill_frac = params.pipeline_fill_frac if g.gemm_m > 4 else 1.0
     return GroupAlloc(
         gid=g.idx, tiles=eff_tiles, cores=cores, dup=dup, rounds=rounds,
         percore_slots=min(slots_needed, cim.n_macro_groups),
-        boundary_in=boundary_in, compute=float(compute), vector=float(vector),
+        boundary_in=boundary_in, weight_source=source,
+        col_slots=min(colsz, cim.n_macro_groups),
+        compute=float(compute), vector=float(vector),
         comm=float(comm), comm_gmem=float(comm_gmem), fill_frac=fill_frac,
-        # every replica fetches the full weights once per stage execution
-        # (oversized groups stream them in rounds, same total bytes)
-        load_bytes=g.weight_bytes * dup)
+        # every replica fetches the full static weights once per stage
+        # execution; dynamic weights never touch gmem (they arrive as a
+        # predecessor's activations and are priced per sample above)
+        load_bytes=0 if source == "dynamic" else g.weight_bytes * dup)
 
 
 def place_stage(allocs: Sequence["GroupAlloc"],
@@ -403,13 +459,17 @@ def place_stage(allocs: Sequence["GroupAlloc"],
     Returns one base core per alloc (replicas occupy consecutive
     ``cores``-wide windows from there), such that no core's MG-slot
     occupancy exceeds the CIM unit — or ``None`` if no placement exists.
-    Weight-streaming groups (rounds > 1) require an exclusive window.
-    This is the single source of truth for stage feasibility: the
-    cost model and the code generator both use it.
+    Weight-streaming groups (rounds > 1) take every remaining slot of
+    their window: they *prefer* an exclusive window (their round count
+    was sized for the full slot range) but may time-share a core as
+    long as one n-column's worth of slots is free — the op-level
+    planner then cycles the rounds through the group's own slot range
+    above its co-residents.  This is the single source of truth for
+    stage feasibility: the cost model and the code generator both use
+    it.
     """
     slots = chip.core.cim.n_macro_groups
     occ = [0] * chip.n_cores
-    bases: List[int] = []
     # place big groups first for tighter packing, but report in input order
     order = sorted(range(len(allocs)),
                    key=lambda i: -(allocs[i].total_cores * 1000
@@ -419,20 +479,30 @@ def place_stage(allocs: Sequence["GroupAlloc"],
         a = allocs[i]
         need = min(a.total_cores, chip.n_cores)
         placed = False
-        for base in range(0, chip.n_cores - need + 1):
-            window = occ[base:base + need]
-            # exact additive accounting: final per-core occupancy is
-            # order-independent, so codegen (stage order) can never
-            # overflow a placement validated here (size order)
-            if a.rounds > 1:
-                ok = all(o == 0 for o in window)
-            else:
-                ok = all(o + a.percore_slots <= slots for o in window)
-            if ok:
-                for c in range(base, base + need):
-                    occ[c] += slots if a.rounds > 1 else a.percore_slots
-                result[i] = base
-                placed = True
+        if a.rounds > 1:
+            passes = ("exclusive", "shared")
+        else:
+            passes = ("additive",)
+        for mode in passes:
+            for base in range(0, chip.n_cores - need + 1):
+                window = occ[base:base + need]
+                # exact additive accounting: final per-core occupancy is
+                # order-independent, so codegen (stage order) can never
+                # overflow a placement validated here (size order)
+                if mode == "exclusive":
+                    ok = all(o == 0 for o in window)
+                elif mode == "shared":
+                    ok = all(o + a.col_slots <= slots for o in window)
+                else:
+                    ok = all(o + a.percore_slots <= slots for o in window)
+                if ok:
+                    for c in range(base, base + need):
+                        occ[c] = slots if a.rounds > 1 \
+                            else occ[c] + a.percore_slots
+                    result[i] = base
+                    placed = True
+                    break
+            if placed:
                 break
         if not placed:
             return None
@@ -450,13 +520,15 @@ def needs_streaming(g: Group, chip: ChipConfig) -> bool:
 
 
 def _stage_feasible(groups: Sequence[Group], chip: ChipConfig) -> bool:
-    """A stage is feasible if its groups jointly fit the chip's MG capacity
-    (time-sharing of cores allowed).  A weight-streaming group (columns
-    exceed its cores' slots) must be alone in its stage."""
-    if any(needs_streaming(g, chip) for g in groups):
-        return len(groups) == 1
-    chip_tiles = chip.n_cores * chip.core.cim.n_macro_groups
-    total = sum(mg_tiles(g, chip) for g in groups)
+    """A stage is feasible if its groups jointly fit the chip's MG
+    capacity (time-sharing of cores allowed).  A weight-streaming group
+    contributes the slots of the cores it monopolizes, not its (larger)
+    nominal tile count — it may share a stage; :func:`place_stage` is
+    the final arbiter."""
+    slots = chip.core.cim.n_macro_groups
+    chip_tiles = chip.n_cores * slots
+    total = sum(min(mg_tiles(g, chip), min_cores(g, chip) * slots)
+                for g in groups)
     return total <= chip_tiles or len(groups) == 1
 
 

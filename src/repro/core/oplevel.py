@@ -27,7 +27,8 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from .arch import ChipConfig
-from .graph import CondensedGraph, Group, Op
+from .graph import (WEIGHT_DYNAMIC, WEIGHT_STATIC, WEIGHT_STREAMED,
+                    CondensedGraph, Group, Op)
 from .mapping import GroupAlloc, StagePlan
 
 __all__ = ["Im2colSpec", "MgAssign", "ReplicaPlan", "OpSchedule",
@@ -75,8 +76,14 @@ class MgAssign:
 
     All k-tiles of a given n-tile are co-located on one core (consecutive
     slots) so INT32 partial sums accumulate locally; when they exceed the
-    core's MG slots the surplus executes in later ``round`` s with weight
-    re-streaming.
+    core's *free* MG slots the surplus executes in later ``round`` s,
+    cycling the group's own slot range (above any co-resident groups on
+    a time-shared core) with weight re-streaming.
+
+    ``source`` is the tile's weight source: ``static`` tiles load a
+    gmem blob in the stage prologue, ``streamed`` tiles re-load per
+    sample per round, ``dynamic`` tiles are gathered from a predecessor
+    group's activations in local memory and CIM-written every sample.
     """
 
     core: int          # physical core id
@@ -88,6 +95,7 @@ class MgAssign:
     n_len: int         # output channels produced
     ch_off: int = 0    # block-diagonal packing: first conv group
     ch_cnt: int = 1    # conv groups packed into this MG
+    source: str = WEIGHT_STATIC
 
 
 @dataclass
@@ -119,6 +127,12 @@ class OpSchedule:
     gap: bool = False          # fused global average pool
     weight_bits: int = 8
     n_rounds: int = 1          # weight-streaming rounds
+    # weight-source metadata (see repro.core.graph.WEIGHT_SOURCES):
+    weight_source: str = WEIGHT_STATIC
+    weight_pred: Optional[int] = None   # producer group (None = graph in)
+    w_rows: int = 0                     # producer output rows
+    w_row_bytes: int = 0                # producer output row bytes
+    w_transpose: bool = False           # W = producer outputᵀ (Q·Kᵀ)
 
     @property
     def n_chunks(self) -> int:
@@ -208,8 +222,9 @@ def _n_tile_columns(g: Group, chip: ChipConfig) \
                  for k_off, k_len in _split(g.gemm_k, rows)]
                 for n_off, n_len in _split(g.gemm_n, n_out)]
     ch = max(1, min(rows // max(g.gemm_k, 1), n_out // max(g.gemm_n, 1)))
-    if g.gemm_k > rows:
-        # giant grouped op: tile each conv group independently
+    if g.gemm_k > rows or g.gemm_n > n_out:
+        # giant grouped op (per-group K or N exceeds one MG): tile each
+        # conv group independently
         return [[(ci * g.gemm_k + k_off, k_len,
                   ci * g.gemm_n + n_off, n_len, ci, 1)
                  for k_off, k_len in _split(g.gemm_k, rows)]
@@ -224,13 +239,18 @@ def _n_tile_columns(g: Group, chip: ChipConfig) \
 
 def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
                chip: ChipConfig, core_base: int,
-               slot_base: Optional[dict] = None) -> OpSchedule:
+               slot_base: Optional[dict] = None,
+               op_owner: Optional[dict] = None) -> OpSchedule:
     """Physical mapping of one group onto its allocated cores.
 
     ``core_base`` is the first physical core of this group's allocation;
     replicas occupy consecutive ``alloc.cores``-sized windows.
     ``slot_base`` maps physical core -> first free MG slot (time-shared
     stages pack several groups' weights onto one core's macro groups).
+    When a core's tiles exceed its *free* slots, the surplus executes in
+    weight-streaming rounds that cycle the group's own slot range above
+    its co-residents (INT32 partial sums accumulate across rounds, so a
+    column's k-tiles may split between rounds).
     """
     cim = chip.core.cim
     spec = _conv_spec(cg, g)
@@ -239,6 +259,7 @@ def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
     n_total = g.gemm_n * g.groups if g.groups > 1 else g.gemm_n
     m_total = g.gemm_m
     slot_base = slot_base if slot_base is not None else {}
+    dynamic = g.dynamic_weights
 
     columns = _n_tile_columns(g, chip)
     slots = cim.n_macro_groups
@@ -251,38 +272,45 @@ def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
     for ci, col in enumerate(columns):
         per_core_tiles[ci % alloc.cores].extend(col)
     n_rounds = 1
+    streamed_cores: set = set()
     placed_by_rep: List[List[MgAssign]] = []
     for r in range(alloc.dup):
         assigns: List[MgAssign] = []
         for c, tiles_c in enumerate(per_core_tiles):
             pc = core_base + r * alloc.cores + c
             start = slot_base.get(pc, 0)
-            if start + len(tiles_c) > slots:
-                if start > 0:
+            avail = slots - start
+            if len(tiles_c) > avail:
+                if avail <= 0:
                     raise OpLevelError(
-                        f"{g.name}: weight streaming on a time-shared "
-                        f"core (slot base {start}) is not supported")
-                # weight-streaming rounds cycle the full slot range
+                        f"{g.name}: no free MG slots on core {pc} "
+                        f"(co-residents occupy all {slots})")
+                # weight-streaming rounds cycle this group's own slot
+                # range [start, slots) above any co-resident groups
+                streamed_cores.add(pc)
+                src = WEIGHT_DYNAMIC if dynamic else WEIGHT_STREAMED
                 for s, t in enumerate(tiles_c):
-                    rnd, slot = divmod(s, slots)
+                    rnd, slot = divmod(s, avail)
                     n_rounds = max(n_rounds, rnd + 1)
                     assigns.append(MgAssign(
-                        core=pc, slot=slot, round=rnd, k_off=t[0],
+                        core=pc, slot=start + slot, round=rnd, k_off=t[0],
                         k_len=t[1], n_off=t[2], n_len=t[3], ch_off=t[4],
-                        ch_cnt=t[5]))
+                        ch_cnt=t[5], source=src))
             else:
+                src = WEIGHT_DYNAMIC if dynamic else WEIGHT_STATIC
                 for s, t in enumerate(tiles_c):
                     assigns.append(MgAssign(
                         core=pc, slot=start + s, round=0, k_off=t[0],
                         k_len=t[1], n_off=t[2], n_len=t[3], ch_off=t[4],
-                        ch_cnt=t[5]))
+                        ch_cnt=t[5], source=src))
         placed_by_rep.append(assigns)
-    # record additive occupancy (single-round groups only)
-    if n_rounds == 1:
-        for r in range(alloc.dup):
-            for c, tiles_c in enumerate(per_core_tiles):
-                pc = core_base + r * alloc.cores + c
-                slot_base[pc] = slot_base.get(pc, 0) + len(tiles_c)
+    # record additive occupancy: streamed cores are consumed to the top
+    # (their rounds cycle everything above the co-residents)
+    for r in range(alloc.dup):
+        for c, tiles_c in enumerate(per_core_tiles):
+            pc = core_base + r * alloc.cores + c
+            slot_base[pc] = slots if pc in streamed_cores \
+                else slot_base.get(pc, 0) + len(tiles_c)
 
     # Replica ownership is row-aligned for convs (and pool-stride aligned
     # when pooling is fused) so spatial slices map to whole rows.
@@ -312,11 +340,35 @@ def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
                            or m_chunk * n_total * 4 > seg):
         m_chunk = max(1, m_chunk // 2)
 
+    # weight-source metadata: a dynamic group's weights are its anchor's
+    # second input — a predecessor group's (or the graph input's)
+    # activations, gathered from local memory every sample
+    w_pred: Optional[int] = None
+    w_rows = w_row_bytes = 0
+    if dynamic:
+        if cg.source is None or g.anchor is None:
+            raise OpLevelError(f"{g.name}: dynamic weights need the "
+                               f"source graph")
+        anchor = cg.source.ops[g.anchor]
+        if len(anchor.inputs) < 2:
+            raise OpLevelError(f"{g.name}: dynamic-weight anchor has no "
+                               f"weight operand")
+        wop = cg.source.ops[anchor.inputs[1]]
+        if op_owner is None:
+            op_owner = {i: grp.idx for grp in cg for i in grp.op_ids}
+        w_pred = op_owner.get(wop.idx)          # None => graph input
+        w_row_bytes = int(wop.out_shape[-1]) * wop.act_bits // 8
+        w_rows = max(1, wop.out_elems // max(int(wop.out_shape[-1]), 1))
+    source = (WEIGHT_DYNAMIC if dynamic
+              else WEIGHT_STREAMED if n_rounds > 1 else WEIGHT_STATIC)
+
     return OpSchedule(
         gid=g.idx, name=g.name, alloc=alloc, replicas=replicas,
         k_total=k_total, n_total=n_total, m_total=m_total, m_chunk=m_chunk,
         im2col=spec, vector_ops=vops, pool=pool, gap=gap,
-        weight_bits=g.weight_bits, n_rounds=n_rounds)
+        weight_bits=g.weight_bits, n_rounds=n_rounds,
+        weight_source=source, weight_pred=w_pred, w_rows=w_rows,
+        w_row_bytes=w_row_bytes, w_transpose=g.transpose_weights)
 
 
 def plan_stage(cg: CondensedGraph, stage: StagePlan,
@@ -330,12 +382,23 @@ def plan_stage(cg: CondensedGraph, stage: StagePlan,
     """
     schedules: List[OpSchedule] = []
     slot_base: dict = {}
+    op_owner = {i: grp.idx for grp in cg for i in grp.op_ids}
     if stage.bases is not None:
-        for alloc, base in zip(stage.allocs, stage.bases):
-            schedules.append(plan_group(cg, cg[alloc.gid], alloc, chip,
-                                        core_base=base,
-                                        slot_base=slot_base))
-        return schedules
+        # plan single-round (additive) groups first so a streaming
+        # group's rounds cycle above ALL its co-residents' slots —
+        # place_stage validated occupancy in size order, and additive
+        # accounting is order-independent, so only the streamers (which
+        # consume "the rest" of a core) must come last.  Results are
+        # reported in stage order regardless.
+        order = sorted(range(len(stage.allocs)),
+                       key=lambda i: (stage.allocs[i].rounds > 1, i))
+        out: List[Optional[OpSchedule]] = [None] * len(stage.allocs)
+        for i in order:
+            alloc, base = stage.allocs[i], stage.bases[i]
+            out[i] = plan_group(cg, cg[alloc.gid], alloc, chip,
+                                core_base=base, slot_base=slot_base,
+                                op_owner=op_owner)
+        return [s for s in out if s is not None]
     # fallback: sequential left-to-right walk (hand-built StagePlans)
     base = 0
     for alloc in stage.allocs:
@@ -344,7 +407,8 @@ def plan_stage(cg: CondensedGraph, stage: StagePlan,
         if base + need > chip.n_cores:
             base = 0                      # wrap: time-share from the left
         schedules.append(plan_group(cg, g, alloc, chip, core_base=base,
-                                    slot_base=slot_base))
+                                    slot_base=slot_base,
+                                    op_owner=op_owner))
         base += need
         if base >= chip.n_cores:
             base = 0

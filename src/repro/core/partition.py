@@ -220,7 +220,8 @@ def greedy_partition(cg: CondensedGraph, chip: ChipConfig,
                      strategy: str = "generic") -> PartitionResult:
     """Pack groups into stages in topological order until capacity is hit."""
     params = params or CostParams()
-    chip_tiles = chip.n_cores * chip.core.cim.n_macro_groups
+    slots = chip.core.cim.n_macro_groups
+    chip_tiles = chip.n_cores * slots
     stages: List[List[int]] = []
     cur: List[int] = []
     cur_tiles = 0
@@ -228,19 +229,27 @@ def greedy_partition(cg: CondensedGraph, chip: ChipConfig,
     for g in cg:
         t = mg_tiles(g, chip)
         c = min_cores(g, chip)
-        if t > chip_tiles or needs_streaming(g, chip):
-            # oversized / weight-streaming group: own stage
+        # a weight-streaming group occupies the slots of the cores it
+        # monopolizes, not its (larger) nominal tile count — it may
+        # share a stage as long as the mapper can place the result
+        eff = min(t, c * slots)
+        if needs_streaming(g, chip) or t > chip_tiles:
+            if cur and mapper(cg, cur + [g.idx], chip, params) is not None:
+                cur.append(g.idx)
+                cur_tiles += eff
+                cur_cores += c
+                continue
             if cur:
                 stages.append(cur)
             stages.append([g.idx])
             cur, cur_tiles, cur_cores = [], 0, 0
             continue
-        if cur and (cur_tiles + t > chip_tiles
+        if cur and (cur_tiles + eff > chip_tiles
                     or cur_cores + c > chip.n_cores):
             stages.append(cur)
             cur, cur_tiles, cur_cores = [], 0, 0
         cur.append(g.idx)
-        cur_tiles += t
+        cur_tiles += eff
         cur_cores += c
     if cur:
         stages.append(cur)

@@ -10,7 +10,13 @@ generator + functional ISS contract:
 * fixed-point requant ``clip((acc*scale + den/2) // den)`` with
   ``den = div << shift`` (``div`` folds the GAP mean);
 * max-pool on int8 with zero-init windows (valid post-relu);
-* saturating int8 residual adds / SE channel scaling.
+* saturating int8 residual adds / SE channel scaling;
+* dynamic-weight matmuls (attention): the weight matrix is built from
+  the weight-producer group's activations via
+  :func:`repro.core.vecsem.dynamic_weight_matrix` — the same layout
+  codegen's gather V_MOVs realize;
+* fused ``softmax`` / ``layernorm`` / ``gelu`` through the shared
+  integer semantics in :mod:`repro.core.vecsem`.
 
 Also provides the weight-matrix builders tests use to generate gmem
 images (`conv_weight_matrix`, `dwconv_weight_matrix`).
@@ -23,7 +29,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from .codegen import QuantParams, _main_and_skip_preds
+from . import vecsem
+from .codegen import QuantParams, _main_and_skip_preds, _weight_pred
 from .graph import CondensedGraph, Graph
 from .oplevel import Im2colSpec
 
@@ -115,14 +122,24 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
 
     for g in cg:
         main, side = _main_and_skip_preds(cg, g, op_owner)
+        wp = _weight_pred(cg, g, op_owner)
         spec = _group_spec(cg, g)
         q = quant[g.idx]
         res = []
         acc_dbg = []
         vops = _vops(cg, g)
+        anchor_op = src.ops[g.anchor] if g.anchor is not None else None
         for s in range(B):
             x = inputs[s] if main is None else outs[main][s]
-            W = weights[g.idx].astype(np.int32)
+            if g.dynamic_weights:
+                wbuf = inputs[s] if wp is None else outs[wp][s]
+                W = vecsem.dynamic_weight_matrix(
+                    wbuf, anchor_op.gemm_k, anchor_op.gemm_n,
+                    anchor_op.groups,
+                    bool(anchor_op.attrs.get("transpose_weights"))
+                ).astype(np.int32)
+            else:
+                W = weights[g.idx].astype(np.int32)
             if spec is not None:
                 k, stride, pad, dw = spec
                 patches = im2col(x, k, k, stride, pad, dw).astype(np.int32)
@@ -183,6 +200,26 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
                     m = y.reshape(-1, n)
                     tot = m.astype(np.int32).sum(axis=0)
                     y = quantize(tot, q, div=m.shape[0])
+                elif op == "softmax":
+                    # per head-row segment, matching codegen's VLEN
+                    leave_i32()
+                    seg = anchor_op.gemm_n if anchor_op is not None \
+                        else y.shape[-1]
+                    shp = y.shape
+                    y = vecsem.softmax_i8(y.reshape(-1, seg)).reshape(shp)
+                elif op == "layernorm":
+                    leave_i32()
+                    row = y.shape[-1]
+                    if anchor_op is not None:
+                        row = anchor_op.gemm_n * (
+                            anchor_op.groups if anchor_op.groups > 1
+                            else 1)
+                    shp = y.shape
+                    y = vecsem.layernorm_i8(
+                        y.reshape(-1, row)).reshape(shp)
+                elif op == "gelu":
+                    leave_i32()
+                    y = vecsem.gelu_i8(y)
                 else:
                     raise NotImplementedError(
                         f"oracle: fused op {op!r} unsupported")

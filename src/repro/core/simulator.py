@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from . import vectorsim
+from . import vecsem, vectorsim
 from .arch import ChipConfig
 from .codegen import GMEM_BASE, CompiledModel, StageProgram
 from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
@@ -558,6 +558,17 @@ class Simulator:
         if fn == "relu":
             view = lm if i8 else lm.view(np.int32)
             view[di] = np.maximum(view[ai], 0)
+            return
+        if fn in ("softmax", "layernorm", "gelu"):
+            # transformer tails: int8 row-segment semantics shared with
+            # the oracle through repro.core.vecsem (bit-exact contract)
+            if not i8:
+                raise SimError(f"functional mode: {fn} requires int8 "
+                               f"operands")
+            x = lm[ai]                       # (rep, vlen) row segments
+            lm[di] = {"softmax": vecsem.softmax_i8,
+                      "layernorm": vecsem.layernorm_i8,
+                      "gelu": vecsem.gelu_i8}[fn](x)
             return
 
         bi = idx(b_, sb, tb, esz)

@@ -15,8 +15,12 @@ the *same* op-level schedules codegen lowers (``core.oplevel``) and the
   with blocking SEND/RECV per (producer, consumer, sample), so stages
   pipeline at sample granularity, not the row-chunk granularity the
   analytic fill model assumes;
-* **per-sample weight re-streaming** — groups whose columns exceed
-  their cores' MG slots reload weights every round of every sample.
+* **per-sample weight re-streaming / dynamic staging** — weight costs
+  derive from the schedules' weight-source metadata: ``streamed``
+  groups (columns exceed their cores' free MG slots) re-fetch from
+  gmem every round of every sample; ``dynamic`` groups (attention)
+  wait on their weight producer's activations, then pay the gather
+  V_MOVs and CIM array writes every sample.
 
 Cost: one ``plan_stage`` call per stage plus ``O(groups x replicas x
 batch)`` timeline events — typically two to three orders of magnitude
@@ -91,12 +95,19 @@ class _Profile:
     noc: float = 0.0                  # per-sample intra-replica NoC busy
     send_issue: float = 0.0           # delivery serialization on asm core
     gst_bytes: int = 0                # boundary-out bytes per sample
-    prologue_gld_bytes: int = 0       # round-0 weight stream
+    # weight-stream costs, derived from the schedule's weight-source
+    # metadata (static: prologue only; streamed: prologue + per-sample
+    # gmem re-stream; dynamic: per-sample gather + CIM write, no gmem)
+    prologue_gld_bytes: int = 0       # round-0 weight stream (static)
     prologue_cim: float = 0.0         # round-0 CIM_LOAD cycles (per core)
     reload_gld_bytes_tail: int = 0    # rounds >= 1 re-stream (sample 0)
     reload_gld_bytes_full: int = 0    # all rounds re-stream (samples > 0)
     reload_cim_tail: float = 0.0
     reload_cim_full: float = 0.0
+    # dynamic weights: producer handoff + per-sample staging costs
+    dyn_w: Optional[Tuple[int, int, bool]] = None   # (gid|-1, nb, in_stage)
+    dyn_gather_vec: float = 0.0       # gather V_MOVs (per core, max)
+    dyn_load_cim: float = 0.0         # CIM_LOAD cycles, all rounds
 
 
 def _chunk_shapes(sched: OpSchedule, rep: ReplicaPlan,
@@ -134,27 +145,50 @@ def _profile(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
                  main_in_member=(main is not None and main in member),
                  in_nb=in_nb)
 
-    # -- weight load / re-stream ------------------------------------------
+    # -- weight load / re-stream / dynamic staging -------------------------
+    # all three costs derive from the same MgAssign weight-source
+    # metadata codegen lowers (one definition, no drift)
+    dyn = sched.weight_source == "dynamic"
     per_core_rows: Dict[Tuple[int, int], float] = {}
+    per_core_gather: Dict[int, float] = {}
     for a in rep.assigns:
         nb = a.k_len * a.n_len
-        if a.round == 0:
-            p.prologue_gld_bytes += nb
+        if not dyn:
+            if a.round == 0:
+                p.prologue_gld_bytes += nb
+            else:
+                p.reload_gld_bytes_tail += nb
+            p.reload_gld_bytes_full += nb
         else:
-            p.reload_gld_bytes_tail += nb
-        p.reload_gld_bytes_full += nb
+            per_core_gather[a.core] = per_core_gather.get(a.core, 0.0) \
+                + m.vector_cycles("mov", nb)
         key = (a.core, a.round)
         per_core_rows[key] = per_core_rows.get(key, 0.0) \
             + m.weight_load_cycles(a.k_len)
     by_round: Dict[int, float] = {}
     for (c, rnd), cyc in per_core_rows.items():
         by_round[rnd] = max(by_round.get(rnd, 0.0), cyc)
-    p.prologue_cim = by_round.get(0, 0.0)
-    p.reload_cim_tail = sum(v for r, v in by_round.items() if r > 0)
-    p.reload_cim_full = sum(by_round.values())
-    if sched.n_rounds <= 1:
-        p.reload_gld_bytes_tail = p.reload_gld_bytes_full = 0
-        p.reload_cim_tail = p.reload_cim_full = 0.0
+    if dyn:
+        # every round's arrays are (re)written every sample, from the
+        # RECV'd/GLD'd producer activations resident in local memory;
+        # the multi-round path re-loads per m-chunk (codegen's
+        # chunk-outer/round-inner emission), single-round loads once
+        chunk_f = sched.n_chunks if sched.n_rounds > 1 else 1
+        p.dyn_load_cim = sum(by_round.values()) * chunk_f
+        p.dyn_gather_vec = max(per_core_gather.values(),
+                               default=0.0) * chunk_f
+        p.dyn_w = (sched.weight_pred if sched.weight_pred is not None
+                   else -1,
+                   sched.w_rows * sched.w_row_bytes,
+                   sched.weight_pred is not None
+                   and sched.weight_pred in member)
+    else:
+        p.prologue_cim = by_round.get(0, 0.0)
+        p.reload_cim_tail = sum(v for r, v in by_round.items() if r > 0)
+        p.reload_cim_full = sum(by_round.values())
+        if sched.n_rounds <= 1:
+            p.reload_gld_bytes_tail = p.reload_gld_bytes_full = 0
+            p.reload_cim_tail = p.reload_cim_full = 0.0
 
     # -- side (residual / SE-scale) operands -------------------------------
     k0, k1, krow_nb = _side_rows(cg, sched, rep)
@@ -226,6 +260,10 @@ def _profile(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
             p.vec += m.vector_cycles(fn, (hi - lo) * row_nb)
             if "relu" in vo and not relu_here:
                 p.vec += m.vector_cycles("relu", (hi - lo) * row_nb)
+    for vop in vo:
+        # fused special tails (softmax/layernorm/gelu) on the asm core
+        if vop in ("softmax", "layernorm", "gelu") and o1 > o0:
+            p.vec += m.vector_cycles(vop, (o1 - o0) * out_row_nb)
     if sched.pool is not None:
         pl = sched.pool
         if sched.gap:
@@ -384,7 +422,27 @@ class TraceEngine:
                                 t = max(t, arr)
                         else:
                             t = self._gmem(ports, nbytes, t, streams=1)
-                    # per-sample weight re-streaming
+                    # dynamic weights: producer handoff + per-sample
+                    # gather/CIM-write staging (local memory, no gmem)
+                    if p.dyn_w is not None:
+                        wgid, w_nb, in_stage = p.dyn_w
+                        if in_stage:
+                            for pr in range(len(by_gid[wgid].replicas)):
+                                arr = fin[(wgid, pr, s)] + cal.noc * (
+                                    m.avg_hops * m.router_hop_cycles
+                                    + m.link_occupancy_cycles(w_nb))
+                                t = max(t, arr)
+                        elif w_nb:
+                            t = self._gmem(ports, w_nb * len(rep.cores),
+                                           t, streams=len(rep.cores))
+                        t += (p.dyn_gather_vec * cal.vector
+                              + p.dyn_load_cim * cal.load)
+                        nc = len(rep.cores)
+                        busy["vector"] = busy.get("vector", 0.0) \
+                            + p.dyn_gather_vec * nc
+                        busy["cim"] = busy.get("cim", 0.0) \
+                            + p.dyn_load_cim * nc
+                    # per-sample weight re-streaming (streamed source)
                     rl_bytes = p.reload_gld_bytes_full if s \
                         else p.reload_gld_bytes_tail
                     rl_cim = p.reload_cim_full if s else p.reload_cim_tail

@@ -1,0 +1,104 @@
+"""Shared integer semantics for data-dependent vector ops.
+
+The functional ISS (:mod:`repro.core.simulator`) and the numpy oracle
+(:mod:`repro.core.ref`) must agree *bit-exactly* on every operation a
+compiled program performs.  For relu / add / quant that contract is a
+few lines of saturating int8 arithmetic; the transformer ops —
+softmax, layernorm, gelu — need a fixed-point definition that both
+sides share, so it lives here and is imported by both.
+
+The definitions are LUT/shift arithmetic a digital CIM vector unit can
+realize:
+
+* ``softmax_i8``  — per row segment: ``e = EXP2_LUT[max(x) - x]``
+  (Q14 table of ``2^(-d/16)``), output ``round(127·e / Σe)``;
+* ``layernorm_i8`` — per row: n-scaled deviations ``d = n·x - Σx``,
+  integer RMS via exact ``isqrt``, output ``round(G·d / rms)`` with
+  gain ``G = 48`` (≈ 2.6σ of headroom in int8);
+* ``gelu_i8``     — 256-entry LUT at 1/16-unit input scale.
+
+Also provides :func:`dynamic_weight_matrix`, the one definition of how
+a *dynamic* weight operand (a predecessor op's activations — see the
+weight-source abstraction in :mod:`repro.core.graph`) maps onto the
+block-diagonal ``(K_total, N_total)`` CIM layout.  Codegen's gather
+V_MOVs, the functional ISS and the oracle all follow this layout.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["softmax_i8", "layernorm_i8", "gelu_i8",
+           "dynamic_weight_matrix", "EXP2_LUT", "GELU_LUT", "LN_GAIN"]
+
+# EXP2_LUT[d] = round(2^14 · 2^(-d/16)) for d = max(x) - x in [0, 255]:
+# a 16-th-of-a-unit exponent step keeps 8 input units of dynamic range.
+EXP2_LUT = np.round(
+    2.0 ** 14 * 2.0 ** (-np.arange(256, dtype=np.float64) / 16.0)
+).astype(np.int64)
+
+# GELU on int8 at 1/16-unit input scale: y = round(v · Φ(v/16))
+# (tanh approximation), clipped to int8.
+_v = np.arange(-128, 128, dtype=np.float64)
+_t = _v / 16.0
+_phi = 0.5 * (1.0 + np.tanh(0.7978845608028654
+                            * (_t + 0.044715 * _t ** 3)))
+GELU_LUT = np.clip(np.round(_v * _phi), -128, 127).astype(np.int8)
+del _v, _t, _phi
+
+LN_GAIN = 48          # layernorm output scale (target std in int8 units)
+
+
+def softmax_i8(x: np.ndarray) -> np.ndarray:
+    """Row-wise integer softmax: int8 ``(..., n)`` → int8 in [0, 127]."""
+    xi = x.astype(np.int64)
+    d = np.clip(xi.max(axis=-1, keepdims=True) - xi, 0, 255)
+    e = EXP2_LUT[d]
+    s = e.sum(axis=-1, keepdims=True)
+    y = (127 * e + (s >> 1)) // s
+    return np.clip(y, 0, 127).astype(np.int8)
+
+
+def _isqrt(v: np.ndarray) -> np.ndarray:
+    """Exact elementwise floor-sqrt of non-negative int64."""
+    r = np.sqrt(v.astype(np.float64)).astype(np.int64)
+    r = np.where(r * r > v, r - 1, r)            # float64 sqrt is within
+    r = np.where((r + 1) * (r + 1) <= v, r + 1, r)   # ±1 ulp of exact
+    return np.maximum(r, 0)
+
+
+def layernorm_i8(x: np.ndarray) -> np.ndarray:
+    """Row-wise integer layernorm: int8 ``(..., n)`` → int8."""
+    xi = x.astype(np.int64)
+    n = x.shape[-1]
+    s = xi.sum(axis=-1, keepdims=True)
+    d = n * xi - s                               # n-scaled deviation
+    ss = (d * d).sum(axis=-1, keepdims=True)
+    r = _isqrt(ss // n) + 1                      # n-scaled RMS (+1: /0)
+    y = (2 * LN_GAIN * d + r) // (2 * r)         # round-half-up
+    return np.clip(y, -128, 127).astype(np.int8)
+
+
+def gelu_i8(x: np.ndarray) -> np.ndarray:
+    """Elementwise int8 GELU through the shared LUT."""
+    return GELU_LUT[x.astype(np.int16) + 128]
+
+
+def dynamic_weight_matrix(buf: np.ndarray, gemm_k: int, gemm_n: int,
+                          groups: int, transpose: bool) -> np.ndarray:
+    """Producer activations → block-diagonal ``(K_total, N_total)`` int8.
+
+    ``buf`` is the weight producer's per-sample output in its natural
+    row layout — ``(rows, groups·gemm_k)`` when ``transpose`` (Q·Kᵀ:
+    rows are sequence positions, per-head channels become weight rows)
+    or ``(gemm_k, groups·gemm_n)`` otherwise (P·V: rows are weight
+    rows directly).
+    """
+    w = gemm_k if transpose else gemm_n
+    b = np.asarray(buf).reshape(-1, groups * w)
+    W = np.zeros((groups * gemm_k, groups * gemm_n), dtype=np.int8)
+    for gi in range(groups):
+        blk = b[:, gi * w:(gi + 1) * w]
+        W[gi * gemm_k:(gi + 1) * gemm_k,
+          gi * gemm_n:(gi + 1) * gemm_n] = blk.T if transpose else blk
+    return W

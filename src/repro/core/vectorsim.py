@@ -39,14 +39,25 @@ bandwidth divisors), for which float addition is exact in any order; a
 chip configured with non-power-of-two divisors could in principle
 differ from the scalar path in the last ulp.
 
-Programs outside the statically-decodable subset (data-dependent
-branches, scalar ALU register chains, custom instructions) fall back to
-the scalar interpreter per stage; ``mode="func"`` always uses it (bit-
-exact data semantics are inherently per-instruction).
+Branches and scalar-ALU register chains are *statically resolved*: in
+perf mode no instruction writes a register from simulated data (S_LD
+does not write back), so the register file — and with it every branch
+condition and loop bound — is a pure function of the immediate stream.
+Such programs are unrolled at decode time by a scalar pre-execution
+(:meth:`StageDecoder.unroll_decode`) into the same block/boundary
+replay items the vectorized path produces.  Only custom instructions
+and unrolls beyond the cap fall back to the scalar interpreter per
+stage; ``mode="func"`` always uses it (bit-exact data semantics are
+inherently per-instruction).
+
+The replay loop schedules cores through an event heap keyed on
+``(core time, program order)`` — identical pick order to the scalar
+interpreter's linear min-scan, O(log n_cores) per item.
 """
 
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -157,6 +168,207 @@ class StageDecoder:
         self.id_cfg, self.id_cfgr = g("CIM_CFG"), g("CIM_CFGR")
         self.id_setvl = g("V_SETVL")
         self.id_sld, self.id_sst = g("S_LD"), g("S_ST")
+        self._vector_ops = {d.name for d in isa.descriptors
+                            if d.unit == "vector" and d.name != "V_SETVL"}
+
+    # -- decode-time unrolling (branches / scalar-ALU chains) ---------------
+
+    _SALU = {
+        "S_ADD": lambda x, y: x + y, "S_SUB": lambda x, y: x - y,
+        "S_MUL": lambda x, y: x * y, "S_AND": lambda x, y: x & y,
+        "S_OR": lambda x, y: x | y, "S_XOR": lambda x, y: x ^ y,
+        "S_SLT": lambda x, y: int(x < y),
+        "S_SLL": lambda x, y: x << (y & 31),
+        "S_SRL": lambda x, y: (x & 0xFFFFFFFF) >> (y & 31),
+    }
+    UNROLL_CAP = 1_000_000
+
+    def _needs_unroll(self, pk) -> bool:
+        """True when the live range holds control flow / S_ALU chains —
+        interpretable at decode time but outside the vectorized batch."""
+        op = pk.op
+        kind = self.kind[op]
+        h = np.flatnonzero(kind == _K_HALT)
+        end = int(h[0]) + 1 if len(h) else len(op)
+        if bool((kind[:end] == _K_UNSUP).any()):
+            return True
+        dst = pk.args.get("dst")
+        acol = pk.args.get("a")
+        if dst is None or acol is None:
+            return False
+        addi = op[:end] == self.id_addi
+        return bool((addi & (dst[:end] != 0) & (acol[:end] != 0)
+                     & (acol[:end] != dst[:end])).any())
+
+    def unroll_decode(self, program: Program, cid: int,
+                      out: "_DecodedStage") -> None:
+        """Scalar pre-execution of one program at decode time.
+
+        Perf mode's register file is fully static (no instruction
+        writes a register from simulated data), so branches and scalar
+        ALU chains resolve here: the walked pc trace collapses into the
+        same block/boundary replay items — and identical busy / event /
+        instruction totals — the vectorized path produces.  Raises
+        :class:`DecodeUnsupported` for instructions even this path
+        cannot execute (custom ops) or when the unrolled trace exceeds
+        :data:`UNROLL_CAP`.
+        """
+        m = self.m
+        instrs = program.instrs
+        n = len(instrs)
+        G = [0] * 32
+        S = [0] * 64
+        occ = 0                               # MG occupancy mask
+        items: List[tuple] = []
+        runs: List[tuple] = []
+        cur: List[float] = []
+        cur_u = -1
+        busy = [0.0] * 4
+        used = [False] * 4
+        ev = [0.0] * 4
+        evp = [False] * 4
+        n_static = 0
+        halted = False
+
+        def close_run() -> None:
+            nonlocal cur
+            if cur:
+                A = 0.0
+                for lat in cur[:-1]:
+                    A += lat if lat > 1.0 else 1.0
+                runs.append((cur_u, A, cur[-1]))
+                cur = []
+
+        def emit(u: int, lat: float) -> None:
+            nonlocal cur_u, n_static
+            if u != cur_u:
+                close_run()
+                cur_u = u
+            cur.append(float(lat))
+            busy[u] += lat
+            used[u] = True
+            n_static += 1
+
+        def boundary(item: tuple) -> None:
+            nonlocal cur_u
+            close_run()
+            cur_u = -1
+            if runs:
+                items.append((_BLOCK, list(runs)))
+                runs.clear()
+            items.append(item)
+
+        pc = 0
+        steps = 0
+        while pc < n:
+            steps += 1
+            if steps > self.UNROLL_CAP:
+                raise DecodeUnsupported(
+                    f"core {cid}: unrolled trace exceeds "
+                    f"{self.UNROLL_CAP} instructions")
+            ins = instrs[pc]
+            name = ins.op
+            a = ins.args
+            if name == "HALT":
+                boundary((_K_HALT,))
+                halted = True
+                break
+            if name == "NOP":
+                emit(_SCALAR, 1.0)
+            elif name == "S_ADDI":
+                emit(_SCALAR, m.scalar_alu_cycles)
+                if a["dst"]:
+                    G[a["dst"]] = G[a["a"]] + a["imm"]
+            elif name == "S_LUI":
+                emit(_SCALAR, m.scalar_alu_cycles)
+                if a["dst"]:
+                    G[a["dst"]] = (a["imm"] & 0xFFFF) << 16
+            elif name in self._SALU:
+                emit(_SCALAR, m.scalar_mul_cycles if name == "S_MUL"
+                     else m.scalar_alu_cycles)
+                if a.get("dst"):
+                    G[a["dst"]] = self._SALU[name](G[a["a"]], G[a["b"]])
+            elif name in ("S_LD", "S_ST"):
+                emit(_SCALAR, m.scalar_ldst_cycles)
+                ev[0] += 4.0
+                evp[0] = True
+            elif name in ("BEQ", "BNE", "BLT"):
+                x, y = G[a["a"]], G[a["b"]]
+                taken = {"BEQ": x == y, "BNE": x != y,
+                         "BLT": x < y}[name]
+                emit(_SCALAR, m.branch_cycles(taken))
+                if taken:
+                    pc += a["off"]
+                    continue
+            elif name == "JAL":
+                emit(_SCALAR, m.branch_cycles(True))
+                G[31] = pc + 1
+                pc += a["off"]
+                continue
+            elif name == "CIM_CFG":
+                emit(_SCALAR, 1.0)
+                S[a["sreg"]] = a["imm"]
+            elif name == "CIM_CFGR":
+                emit(_SCALAR, 1.0)
+                S[a["sreg"]] = G[a["src"]]
+            elif name == "CIM_LOAD":
+                rows = a["rows"]
+                emit(_CIM, m.weight_load_cycles(rows))
+                wl = rows * max(S[_S_NLEN], 1)
+                ev[0] += wl
+                ev[1] += wl
+                evp[0] = evp[1] = True
+                occ |= 1 << a["mg"]
+            elif name == "CIM_MVM":
+                rep = a["rep"]
+                emit(_CIM, m.mvm_cycles(rep))
+                mask = (S[_S_MASK_LO] & 0xFFFF) | (S[_S_MASK_HI] << 16)
+                active = bin(occ & mask).count("1")
+                ev[2] += rep * active * m.macros_per_group
+                ev[0] += rep * (S[_S_SEG_IN] + S[_S_SEG_OUT])
+                evp[0] = evp[2] = True
+            elif name == "V_SETVL":
+                emit(_SCALAR, 1.0)
+                S[_S_VLEN] = a["len"]
+            elif name == "BCAST":
+                emit(_NOC, m.send_issue_cycles(int(G[a["size"]])))
+            elif name in self._vector_ops:
+                fn = name[2:].lower()
+                nel = max(1, S[_S_VLEN]) * max(1, S[_S_VREP])
+                emit(_VECTOR, m.vector_cycles(fn, nel))
+                esz = 1 if (a.get("flags", 0) & _I8_FLAG) else 4
+                ev[3] += nel
+                ev[0] += nel * esz * 2
+                evp[0] = evp[3] = True
+            elif name == "SEND":
+                boundary((_K_SEND, int(G[a["core"]]), int(G[a["size"]]),
+                          S[_S_CHANNEL]))
+            elif name == "RECV":
+                boundary((_K_RECV, int(G[a["core"]]), int(G[a["size"]]),
+                          S[_S_CHANNEL]))
+            elif name == "GLD":
+                boundary((_K_GLD, int(G[a["size"]])))
+            elif name == "GST":
+                boundary((_K_GST, int(G[a["size"]])))
+            elif name == "SYNC":
+                boundary((_K_SYNC, a["barrier"]))
+            else:
+                raise DecodeUnsupported(
+                    f"core {cid}: instruction {name!r}")
+            pc += 1
+        if not halted:
+            close_run()
+            if runs:
+                items.append((_BLOCK, list(runs)))
+                runs.clear()
+            items.append((_END,))
+        out.items[cid] = items
+        for u in range(4):
+            out.busy[u] += busy[u]
+            out.unit_used[u] = out.unit_used[u] or used[u]
+            out.events[u] += ev[u]
+            out.ev_present[u] = out.ev_present[u] or evp[u]
+        out.n_static += n_static
 
     # -- dataflow helpers ---------------------------------------------------
 
@@ -222,15 +434,22 @@ class StageDecoder:
             out.n_prog[cid] = len(prog)
             if len(prog) == 0:
                 out.items[cid] = [(_END,)]
+                continue
+            try:
+                # cache hit when codegen shipped the table with the
+                # program; handwritten programs pack here once
+                pk = prog.pack(self.isa)
+            except KeyError as e:            # op not in the ISA at all
+                raise DecodeUnsupported(
+                    f"unknown instruction {e}") from e
+            if self._needs_unroll(pk):
+                # control flow / scalar-ALU chains: statically resolved
+                # by decode-time scalar pre-execution (perf mode's
+                # register file never depends on simulated data)
+                self.unroll_decode(prog, cid, out)
             else:
                 cids.append(cid)
-                try:
-                    # cache hit when codegen shipped the table with the
-                    # program; handwritten programs pack here once
-                    packs.append(prog.pack(self.isa))
-                except KeyError as e:        # op not in the ISA at all
-                    raise DecodeUnsupported(
-                        f"unknown instruction {e}") from e
+                packs.append(pk)
         if not cids:
             return out
 
@@ -475,12 +694,12 @@ class StageDecoder:
         busy = np.bincount(unit, weights=lat_nb, minlength=4)
         cnt = np.bincount(unit[nb], minlength=4)
         for u in range(4):
-            out.busy[u] = float(busy[u])
-            out.unit_used[u] = bool(cnt[u])
+            out.busy[u] += float(busy[u])
+            out.unit_used[u] = out.unit_used[u] or bool(cnt[u])
         for k in range(4):
-            out.events[k] = ev_tot[k]
-            out.ev_present[k] = ev_cnt[k] > 0
-        out.n_static = int(nb.sum())
+            out.events[k] += ev_tot[k]
+            out.ev_present[k] = out.ev_present[k] or ev_cnt[k] > 0
+        out.n_static += int(nb.sum())
 
         # ---- assemble per-core replay items -----------------------------
         # all run-index lookups batched: for each boundary, the block
@@ -541,10 +760,6 @@ class _VCore:
         self.blocked = False
         self.halted = False
         self.n_prog = n_prog
-
-
-def _core_time(core: "_VCore") -> float:
-    return core.time
 
 
 def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
@@ -616,15 +831,32 @@ def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
         ev("noc_byte_hops", nbytes * m.hops(src, dst))
         return t + occupy
 
-    while True:
-        ready = [c for c in pending if not c.halted and not c.blocked]
-        if not ready:
-            if all(c.halted for c in pending):
-                break
-            blocked = [c.id for c in pending if c.blocked]
-            raise Deadlock(f"cores {blocked} blocked "
-                           f"(recv/sync with no sender)")
-        core = min(ready, key=_core_time)
+    # event heap keyed on (time, program order): pops exactly the core
+    # the interpreter's linear min-scan would pick (earliest time, then
+    # program-dict order on ties), at O(log n) per item — the linear
+    # scan dominated replay wall time on 64+-core stages.  Invariant:
+    # every runnable (non-halted, non-blocked) core sits in the heap
+    # exactly once; blocked cores re-enter when a SEND/SYNC frees them.
+    seq = {c.id: i for i, c in enumerate(pending)}
+    heap: List[Tuple[float, int, _VCore]] = [
+        (c.time, seq[c.id], c) for c in pending]
+    heapq.heapify(heap)
+
+    def wake(other: "_VCore") -> None:
+        other.blocked = False
+        heapq.heappush(heap, (other.time, seq[other.id], other))
+
+    while heap:
+        et, sq, core = heapq.heappop(heap)
+        if core.halted:
+            continue
+        if et != core.time:
+            # stale key (a SYNC release advanced this core's clock
+            # while it sat in the heap): lazily re-key so pick order
+            # stays exactly (current time, program order) — the scalar
+            # interpreter's min-scan
+            heapq.heappush(heap, (core.time, sq, core))
+            continue
         item = core.items[core.ip]
         tag = item[0]
 
@@ -648,7 +880,7 @@ def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
             ev("lmem_bytes", size)
             other = cores.get(dst)
             if other is not None and other.blocked:
-                other.blocked = False
+                wake(other)
             core.ip += 1
         elif tag == _K_RECV:
             instrs += 1
@@ -690,8 +922,13 @@ def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
                 t = max(c.time for c in group) + 1
                 for c in group:
                     c.time = t
-                    c.blocked = False
                     c.ip += 1
+                    if c is core:
+                        c.blocked = False
+                    elif c.blocked:
+                        # a member spuriously woken by an earlier SEND
+                        # already holds a heap ticket — don't double-push
+                        wake(c)
                 barriers[item[1]] = []
         elif tag == _K_HALT:
             instrs += 1
@@ -701,7 +938,13 @@ def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
             core.halted = True
         if core.time > max_cycles:
             raise SimError("max_cycles exceeded")
+        if not core.halted and not core.blocked:
+            heapq.heappush(heap, (core.time, seq[core.id], core))
 
+    if pending and not all(c.halted for c in pending):
+        blocked = [c.id for c in pending if c.blocked]
+        raise Deadlock(f"cores {blocked} blocked "
+                       f"(recv/sync with no sender)")
     makespan = max((c.time for c in cores.values()), default=0.0)
     busy = {UNITS[u]: busy4[u] for u in range(4) if used4[u]}
     return makespan, events, busy, instrs

@@ -163,44 +163,57 @@ def efficientnetb0(res: int = 224, n_classes: int = 1000,
 
 
 # ---------------------------------------------------------------------------
-# Transformer LM (compiler stress workload; attention matmuls are
-# dynamic-weight MVMs)
+# Transformer LM (post-LN blocks; attention matmuls are dynamic-weight
+# MVMs — their "weights" are the K / V activations, written into macro
+# groups at runtime; see the weight-source abstraction in repro.core.graph)
 # ---------------------------------------------------------------------------
 
 
 def transformer_lm(n_layers: int = 4, d_model: int = 512, n_heads: int = 8,
                    d_ff: Optional[int] = None, seq: int = 128,
                    vocab: int = 32000) -> Graph:
+    """Post-LN transformer blocks over an embedding projection.
+
+    ``scores = q @ kᵀ`` carries ``attrs['transpose_weights']`` (the
+    weight matrix is the transposed K activations); ``ctx = p @ v``
+    uses V rows directly.  Both are grouped per-head GEMMs whose
+    block-diagonal packing consumes whole activation rows, so the
+    compiled input layout is exactly the producer's HW row layout.
+    Post-LN placement keeps every residual tap a *group output*, which
+    is the layout contract codegen's side-operand routing assumes.
+    """
     d_ff = d_ff or 4 * d_model
     g = Graph(f"transformer_{n_layers}L_{d_model}d")
-    x = g.input("tokens", (seq, d_model))   # post-embedding activations
+    x = g.input("tokens", (seq, d_model))   # token embeddings
+    # embedding projection: gives layer 0's residual tap a group output
+    x = g.linear("embed", x, cout=d_model, bias=False)
+    dh = d_model // n_heads
 
     def mha(name: str, src: int) -> int:
         q = g.linear(f"{name}.q", src, cout=d_model, bias=False)
         k = g.linear(f"{name}.k", src, cout=d_model, bias=False)
         v = g.linear(f"{name}.v", src, cout=d_model, bias=False)
         # scores = q @ k^T : per-head (seq x dh) @ (dh x seq)
-        dh = d_model // n_heads
         sc = g.add(Op(name=f"{name}.scores", kind="matmul", inputs=(q, k),
                       out_shape=(n_heads, seq, seq), gemm_m=seq, gemm_k=dh,
                       gemm_n=seq, groups=n_heads,
-                      attrs={"dynamic_weights": True}))
+                      attrs={"dynamic_weights": True,
+                             "transpose_weights": True}))
         sm = g.unary(f"{name}.softmax", "softmax", sc)
         ctx = g.add(Op(name=f"{name}.ctx", kind="matmul", inputs=(sm, v),
                        out_shape=(seq, d_model), gemm_m=seq, gemm_k=seq,
                        gemm_n=dh, groups=n_heads,
                        attrs={"dynamic_weights": True}))
         o = g.linear(f"{name}.o", ctx, cout=d_model, bias=False)
-        return g.eltwise(f"{name}.res", "add", o, src)
+        r = g.eltwise(f"{name}.res", "add", o, src)
+        return g.unary(f"{name}.ln", "layernorm", r)
 
     for li in range(n_layers):
-        x = g.unary(f"l{li}.ln1", "layernorm", x)
         x = mha(f"l{li}.attn", x)
-        y = g.unary(f"l{li}.ln2", "layernorm", x)
-        y = g.linear(f"l{li}.up", y, cout=d_ff, bias=False, act="gelu")
+        y = g.linear(f"l{li}.up", x, cout=d_ff, bias=False, act="gelu")
         y = g.linear(f"l{li}.down", y, cout=d_model, bias=False)
-        x = g.eltwise(f"l{li}.res2", "add", y, x)
-    x = g.unary("ln_f", "layernorm", x)
+        y = g.eltwise(f"l{li}.res2", "add", y, x)
+        x = g.unary(f"l{li}.ln2", "layernorm", y)
     g.linear("lm_head", x, cout=vocab, bias=False)
     return g
 

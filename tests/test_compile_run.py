@@ -184,6 +184,157 @@ def test_maxpool_with_padding():
     _check_final(model, rep, oracle, cg)
 
 
+def test_streamed_group_shares_stage():
+    """A weight-streaming (multi-round) group no longer monopolizes its
+    stage: it co-schedules with its producer on disjoint core windows,
+    pipelines within the stage, and stays bit-exact."""
+    g = Graph("stream_shared")
+    x = g.input("x", (32, 32, 4))
+    c = g.conv("c1", x, cout=4, k=3, act="relu", use_bn=False)
+    f = g.unary("flatten", "flatten", c)
+    h, w, cc = g.ops[c].out_shape
+    g.ops[f].out_shape = (h * w * cc,)
+    g.linear("fc", f, cout=8)
+    chip = default_chip(n_cores=2, mesh_cols=1, n_macro_groups=4,
+                        macros_per_group=1)
+    model, rep, oracle, cg = _run_both(g, chip, batch=2)
+    assert len(model.stages) == 1, "streaming group not co-scheduled"
+    by_src = {sc.weight_source: sc for st in model.stages
+              for sc in st.schedules}
+    assert by_src["streamed"].n_rounds > 1
+    assert "static" in by_src
+    _check_final(model, rep, oracle, cg)
+
+
+def test_transformer_dynamic_weights_end_to_end():
+    """Dynamic-weight attention (Q·Kᵀ / P·V written into macro groups
+    from RECV'd activations) + fused softmax/layernorm/gelu tails: the
+    compiled streams must match the oracle bit-exactly on the default
+    chip, through the weight-source lowering path."""
+    g = workloads.transformer_lm(n_layers=1, d_model=128, n_heads=4,
+                                 seq=16, vocab=64)
+    chip = default_chip()
+    model, rep, oracle, cg = _run_both(g, chip, batch=2)
+    _check_final(model, rep, oracle, cg)
+    sources = {sc.weight_source for st in model.stages
+               for sc in st.schedules}
+    assert "dynamic" in sources, "attention did not lower dynamically"
+
+
+def test_transformer_dynamic_multiround_end_to_end():
+    """A slot-starved chip forces the dynamic path through multi-round
+    streaming with multiple m-chunks — the restriction the static path
+    still has — and must stay bit-exact."""
+    g = workloads.transformer_lm(n_layers=1, d_model=128, n_heads=4,
+                                 seq=16, vocab=64)
+    chip = default_chip(n_cores=2, mesh_cols=1, n_macro_groups=2,
+                        macros_per_group=2)
+    model, rep, oracle, cg = _run_both(g, chip, batch=2)
+    _check_final(model, rep, oracle, cg)
+    dyn_rounds = max(sc.n_rounds for st in model.stages
+                     for sc in st.schedules
+                     if sc.weight_source == "dynamic")
+    assert dyn_rounds > 1, "expected multi-round dynamic streaming"
+
+
+def test_transformer_func_matches_jax_reference():
+    """Acceptance: func-mode output == the JAX reference.
+
+    The reference is an *independent* jnp forward pass — per-head
+    einsum attention instead of block-diagonal matrices, the shared
+    integer softmax/layernorm/gelu semantics re-implemented in jnp —
+    checked against the functional ISS output of the compiled model.
+    """
+    jax = pytest.importorskip("jax")
+    from jax.experimental import enable_x64
+    import jax.numpy as jnp
+    from repro.core import vecsem
+
+    H, dh, seq, d, vocab = 2, 32, 8, 64, 32
+    g = workloads.transformer_lm(n_layers=1, d_model=d, n_heads=H,
+                                 seq=seq, vocab=vocab)
+    cg = g.condense()
+    chip = default_chip(n_cores=8, mesh_cols=4)
+    res = partition(cg, chip, "dp", CostParams(batch=2))
+    weights, biases = _weights_for(cg)
+    inputs = RNG.integers(-8, 8, (2, seq, d)).astype(np.int8)
+    qp = ref.auto_quant(cg, weights, biases, inputs)
+    model = compile_model(res, batch=2, quant=qp, strict_lmem=True)
+    img = model.build_gmem_image(weights, biases, inputs)
+    rep = Simulator(chip, model.isa, mode="func").run_model(
+        model, gmem_image=img)
+
+    gid = {grp.name: grp.idx for grp in cg}
+    with enable_x64():
+        EXP2 = jnp.asarray(vecsem.EXP2_LUT)
+        GELU = jnp.asarray(vecsem.GELU_LUT)
+
+        def j_quant(acc, gd):
+            q = qp[gd]
+            den = 1 << q.shift
+            v = (acc.astype(jnp.int64) * q.scale + (den >> 1)) // den
+            return jnp.clip(v, -128, 127).astype(jnp.int8)
+
+        def j_lin(x, gd):
+            w = jnp.asarray(weights[gd], jnp.int32)
+            return j_quant(x.astype(jnp.int32) @ w, gd)
+
+        def j_softmax(x):
+            xi = x.astype(jnp.int64)
+            dd = jnp.clip(xi.max(-1, keepdims=True) - xi, 0, 255)
+            e = EXP2[dd]
+            s = e.sum(-1, keepdims=True)
+            return jnp.clip((127 * e + (s >> 1)) // s, 0,
+                            127).astype(jnp.int8)
+
+        def j_layernorm(x):
+            xi = x.astype(jnp.int64)
+            n = x.shape[-1]
+            s = xi.sum(-1, keepdims=True)
+            dv = n * xi - s
+            ss = (dv * dv).sum(-1, keepdims=True)
+            r = jnp.sqrt((ss // n).astype(jnp.float64)).astype(jnp.int64)
+            r = jnp.where(r * r > ss // n, r - 1, r)
+            r = jnp.where((r + 1) * (r + 1) <= ss // n, r + 1, r) + 1
+            y = (2 * vecsem.LN_GAIN * dv + r) // (2 * r)
+            return jnp.clip(y, -128, 127).astype(jnp.int8)
+
+        def j_sat_add(a, b):
+            return jnp.clip(a.astype(jnp.int16) + b.astype(jnp.int16),
+                            -128, 127).astype(jnp.int8)
+
+        def heads(x):                     # (seq, d) -> (H, seq, dh)
+            return x.reshape(seq, H, dh).transpose(1, 0, 2)
+
+        outs = []
+        for s in range(2):
+            x = jnp.asarray(inputs[s])
+            e_ = j_lin(x, gid["embed"])
+            qv = heads(j_lin(e_, gid["l0.attn.q"])).astype(jnp.int32)
+            kv = heads(j_lin(e_, gid["l0.attn.k"])).astype(jnp.int32)
+            vv = heads(j_lin(e_, gid["l0.attn.v"])).astype(jnp.int32)
+            sc = j_quant(jnp.einsum("hmd,hnd->hmn", qv, kv),
+                         gid["l0.attn.scores"])
+            sm = j_softmax(sc).astype(jnp.int32)
+            ctx = j_quant(jnp.einsum("hmn,hnd->hmd", sm, vv),
+                          gid["l0.attn.ctx"])
+            ctx = ctx.transpose(1, 0, 2).reshape(seq, d)
+            o = j_lin(ctx, gid["l0.attn.o"])
+            x1 = j_layernorm(j_sat_add(o, e_))
+            up = GELU[j_lin(x1, gid["l0.up"]).astype(jnp.int16) + 128]
+            dn = j_lin(up, gid["l0.down"])
+            x2 = j_layernorm(j_sat_add(dn, x1))
+            outs.append(np.asarray(j_lin(x2, gid["lm_head"])))
+
+    last = len(cg) - 1
+    for s in range(2):
+        addr, nb = model.output_addr(last, s)
+        got = rep.gmem[addr - 0x10000000: addr - 0x10000000 + nb]
+        np.testing.assert_array_equal(
+            got, outs[s].reshape(-1),
+            err_msg=f"func-mode output != JAX reference (sample {s})")
+
+
 def test_perf_mode_matches_func_timing():
     """perf mode (no data) must report identical cycle counts."""
     g = workloads.tiny_cnn(res=8, c=8)

@@ -159,6 +159,35 @@ def test_oversized_group_streams_in_rounds():
     assert alloc.rounds > 1
 
 
+def test_streaming_rounds_cycle_above_coresidents():
+    """Weight streaming on a time-shared core (the deleted OpLevelError):
+    a streaming group placed with an additive co-resident cycles its
+    rounds through its OWN slot range, regardless of gid order — the
+    op-level planner lays additive groups down first."""
+    from repro.core.graph import Graph
+    from repro.core.mapping import StagePlan, _alloc_group
+    from repro.core.oplevel import plan_stage
+
+    chip = default_chip(n_cores=1, mesh_cols=1, n_macro_groups=4,
+                        macros_per_group=1)
+    g = Graph("shared")
+    x = g.input("x", (4096,))
+    a = g.linear("big", x, cout=8, bias=False)   # col spans 8 > 4 slots
+    g.linear("small", a, cout=8, bias=False)     # 1 additive tile
+    cg = g.condense()
+    params = CostParams(batch=1)
+    allocs = [_alloc_group(cg[0], chip, params, 1, True),
+              _alloc_group(cg[1], chip, params, 1, False)]
+    sp = StagePlan((0, 1), allocs, chip, params, shared_cores=True,
+                   bases=[0, 0]).bind(cg)
+    big, small = plan_stage(cg, sp, chip)
+    assert small.weight_source == "static"
+    assert {asg.slot for asg in small.replicas[0].assigns} == {0}
+    assert big.weight_source == "streamed" and big.n_rounds > 1
+    slots = {asg.slot for asg in big.replicas[0].assigns}
+    assert 0 not in slots and slots <= {1, 2, 3}
+
+
 def test_partition_covers_all_groups_once():
     cg = workloads.build("efficientnetb0", res=64).condense()
     for strat in ("generic", "cim-mlc", "dp"):

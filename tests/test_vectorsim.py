@@ -88,6 +88,11 @@ def I(op, **args):                       # noqa: E743 — terse test DSL
     ("tiny_cnn", {}, "dp"),
     ("tiny_cnn", {}, "generic"),
     ("resnet18", {"res": 64}, "dp"),
+    # dynamic-weight attention: per-sample mid-stage CIM writes must
+    # replay bit-identically (weight gather V_MOVs + CIM_LOAD from the
+    # RECV'd activations are core-local block ops)
+    ("transformer", {"n_layers": 1, "d_model": 128, "n_heads": 4,
+                     "seq": 16, "vocab": 64}, "dp"),
 ])
 def test_golden_workload_equivalence(model, kw, strategy):
     art = flow.compile(model, CHIP,
@@ -232,11 +237,83 @@ def test_dead_code_after_halt_is_ignored():
     assert_identical(out_s, out_v)
 
 
-def test_branchy_program_falls_back_to_scalar():
-    # a live countdown loop is outside the static subset: auto engine
-    # must fall back and agree with the interpreter; engine="vector"
-    # must refuse rather than silently interpret
+def test_branchy_program_unrolls_statically():
+    # a live countdown loop is statically resolved at decode time (the
+    # perf-mode register file never depends on simulated data): the
+    # vector engine unrolls it and stays bit-identical, including the
+    # per-iteration branch latencies and instruction counts
     body = [I("S_ADDI", dst=1, a=0, imm=3),
+            I("S_ADDI", dst=2, a=0, imm=0),
+            I("S_ADDI", dst=1, a=1, imm=-1),
+            I("BNE", a=1, b=2, off=-1),
+            I("HALT",)]
+    p = prog(0, *body)
+    assert_identical(*run_stage_both({0: p}))
+
+
+def test_scalar_alu_chain_unrolls():
+    # cross-register scalar ALU chains feeding a GLD size / a vector
+    # length: resolved by the decode-time pre-execution
+    body = [I("S_ADDI", dst=1, a=0, imm=6),
+            I("S_ADDI", dst=2, a=0, imm=7),
+            I("S_MUL", dst=3, a=1, b=2),        # 42
+            I("S_ADD", dst=3, a=3, b=1),        # 48
+            I("S_ADDI", dst=4, a=0, imm=256),
+            I("GLD", dst=4, gaddr=4, size=3),
+            I("CIM_CFGR", sreg=SREG["VLEN"], src=3),
+            I("V_ADD", dst=1, a=2, b=3),
+            I("HALT",)]
+    p = prog(0, *body)
+    assert_identical(*run_stage_both({0: p}))
+
+
+def test_loop_with_comms_unrolls():
+    # a loop body containing SEND/RECV rendezvous: the unrolled trace
+    # must preserve boundary ordering and per-retry instruction counts
+    sends = []
+    recvs = []
+    for it in range(3):
+        sends += _send(0, 1, 16, 40 + it)
+        recvs += _recv(1, 0, 16, 40 + it)
+    p0 = prog(0, *(sends
+                   + [I("S_ADDI", dst=9, a=0, imm=2),
+                      I("S_ADDI", dst=9, a=9, imm=-1),
+                      I("BNE", a=9, b=0, off=-1),
+                      I("HALT",)]))
+    p1 = prog(1, *(recvs + [I("HALT",)]))
+    assert_identical(*run_stage_both({0: p0, 1: p1}))
+
+
+def test_custom_op_falls_back_to_scalar():
+    # instructions outside even the unrollable subset (custom
+    # descriptors the simulator has no semantics for) still force the
+    # per-stage fallback; engine="vector" must refuse
+    from repro.core.isa import InstrDescriptor, default_isa as _disa
+    isa2 = _disa()
+    isa2.register(InstrDescriptor(name="X_CUSTOM", opcode=60, fmt="J",
+                                  unit="scalar", operands={}))
+    p = Program(core_id=0)
+    p.append(isa2.instr("X_CUSTOM"))
+    p.append(isa2.instr("HALT"))
+    sp = StageProgram(stage=None, schedules=[], programs={0: p})
+    assert vectorsim.run_stage(Simulator(CHIP, isa2, engine="vector"),
+                               sp) is None
+
+    class _M:                     # minimal CompiledModel stand-in
+        stages = [sp]
+        layout = None
+
+    with pytest.raises(SimError, match="not statically decodable"):
+        Simulator(CHIP, isa2, engine="vector").run_model(_M())
+
+
+def test_auto_engine_fallback_equivalence(monkeypatch):
+    # engine="auto" must fall back per stage and report identically to
+    # the interpreter.  A tiny unroll cap forces the branchy program
+    # out of the decodable subset without needing an op the scalar
+    # interpreter cannot execute.
+    monkeypatch.setattr(vectorsim.StageDecoder, "UNROLL_CAP", 4)
+    body = [I("S_ADDI", dst=1, a=0, imm=5),
             I("S_ADDI", dst=2, a=0, imm=0),
             I("S_ADDI", dst=1, a=1, imm=-1),
             I("BNE", a=1, b=2, off=-1),
@@ -246,15 +323,13 @@ def test_branchy_program_falls_back_to_scalar():
     assert vectorsim.run_stage(Simulator(CHIP, ISA, engine="vector"),
                                sp) is None
 
-    class _M:                     # minimal CompiledModel stand-in
+    class _M:
         stages = [sp]
         layout = None
 
     rep_auto = Simulator(CHIP, ISA, engine="auto").run_model(_M())
     rep_scal = Simulator(CHIP, ISA, engine="scalar").run_model(_M())
     assert_reports_identical(rep_scal, rep_auto)
-    with pytest.raises(SimError, match="not statically decodable"):
-        Simulator(CHIP, ISA, engine="vector").run_model(_M())
 
 
 def test_engine_validation():
@@ -262,6 +337,42 @@ def test_engine_validation():
         Simulator(CHIP, ISA, engine="warp")
     with pytest.raises(ValueError):
         Simulator(CHIP, ISA, mode="func", engine="vector")
+
+
+def test_nonpow2_bandwidth_divisors_exact():
+    """Block replay pre-sums run latencies — exact for dyadic latencies
+    by construction.  A chip with non-power-of-two bandwidth divisors
+    (1/3-cycle weight-load rows, 3-flit links, 48 B/cycle gmem ports)
+    produces non-dyadic floats where re-association *could* differ in
+    the last ulp; pin that the replay still matches the interpreter
+    bit-exactly on a compiled workload (the run-collapse only ever adds
+    the same addends in the same left-to-right order)."""
+    import dataclasses
+    base = default_chip(n_cores=8, mesh_cols=4)
+    chip = dataclasses.replace(
+        base,
+        core=dataclasses.replace(
+            base.core,
+            cim=dataclasses.replace(base.core.cim,
+                                    weight_load_rows_per_cycle=3)),
+        noc=dataclasses.replace(base.noc, flits_per_cycle=3),
+        global_mem_bytes_per_cycle=48,
+        name="nonpow2-divisors")
+    art = flow.compile("tiny_cnn", chip,
+                       flow.CompileOptions(params=CostParams(batch=2)))
+    cm = art.ensure_model()
+    scal = Simulator(chip, cm.isa, engine="scalar").run_model(cm)
+    vec = Simulator(chip, cm.isa, engine="vector").run_model(cm)
+    # timing is bit-exact even for non-dyadic latencies: the replay's
+    # run collapse adds the same addends in the interpreter's order
+    assert vec.cycles == scal.cycles
+    assert vec.stage_cycles == scal.stage_cycles
+    assert vec.events == scal.events
+    assert vec.instrs == scal.instrs
+    # the busy *ledger* is a pure sum and may re-associate: bound it at
+    # one ulp (documented exactness note from the PR-4 ROADMAP entry)
+    for unit, b in scal.unit_busy.items():
+        assert vec.unit_busy[unit] == pytest.approx(b, rel=1e-12)
 
 
 def test_lazy_lmem_allocation():
