@@ -1,0 +1,187 @@
+"""Serving benchmark: committed trace replay + latency golden.
+
+Replays the committed 200-request Poisson trace
+(``benchmarks/serving_trace.json``, rate 5000 req/s, seed 0 — tuned to
+~50% of the default chip's decode capacity so batching policy visibly
+moves the tail) through ``repro.serve`` at trace fidelity under both
+batching policies, and records throughput plus the latency percentiles.
+
+The committed golden is ``BENCH_serving.json`` at the repo root.  The
+simulator touches no wall clock — every recorded number derives from
+deterministic cycle counts — so ``--smoke`` fails on ANY drift of
+throughput or percentiles (cost-model/codegen change: regenerate with
+``--update-golden`` and commit the diff).  ``--smoke`` additionally
+asserts the serving invariant the ISSUE pins: continuous batching
+beats static on p99 per-token latency at equal delivered throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+        [--update-golden] [--make-trace] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_PATH = os.path.join(_ROOT, "BENCH_serving.json")
+TRACE_PATH = os.path.join(_ROOT, "benchmarks", "serving_trace.json")
+
+# committed-trace parameters (only used by --make-trace)
+TRACE_RATE = 5000.0
+TRACE_REQUESTS = 200
+TRACE_SEED = 0
+
+MODEL_KW = dict(n_layers=2, d_model=128, n_heads=4, vocab=256,
+                max_prompt=64, max_new=64)
+FIDELITY = "trace"
+MAX_BATCH = 8
+
+# metric keys gated against the golden (exact match — deterministic)
+_GATED = ("tokens", "throughput_tok_s", "throughput_req_s",
+          "decode_iterations", "peak_decode_batch", "kv_peak_bytes")
+_GATED_PCT = ("ttft_s", "tpot_s", "e2e_s")
+
+
+def make_trace() -> None:
+    from repro.serve import poisson_trace, save_trace
+    save_trace(TRACE_PATH, poisson_trace(
+        TRACE_RATE, TRACE_REQUESTS, seed=TRACE_SEED,
+        max_prompt=MODEL_KW["max_prompt"],
+        max_new=MODEL_KW["max_new"]))
+    print(f"wrote {TRACE_PATH} ({TRACE_REQUESTS} requests, "
+          f"rate {TRACE_RATE} req/s, seed {TRACE_SEED})")
+
+
+def bench_doc() -> Dict:
+    from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
+                             load_trace, make_policy)
+    cfg = ServeModelCfg(**MODEL_KW)
+    table = StepCostTable(cfg, fidelity=FIDELITY)
+    trace = load_trace(TRACE_PATH)
+    policies: Dict[str, Dict] = {}
+    for name in ("static", "continuous"):
+        sim = ServeSim(table, make_policy(name, MAX_BATCH))
+        policies[name] = sim.run(trace)
+    return {
+        "schema": 1,
+        "chip": "default",
+        "fidelity": FIDELITY,
+        "max_batch": MAX_BATCH,
+        "model": cfg.to_dict(),
+        "trace": {"path": "benchmarks/serving_trace.json",
+                  "rate": TRACE_RATE, "requests": TRACE_REQUESTS,
+                  "seed": TRACE_SEED},
+        "policies": policies,
+    }
+
+
+def report(doc: Dict) -> str:
+    out = [f"== serving bench (default chip, fidelity={FIDELITY}, "
+           f"max_batch={MAX_BATCH}) =="]
+    for name, m in doc["policies"].items():
+        out.append(
+            f"{name:<11s} tok/s={m['throughput_tok_s']:9.0f}  "
+            f"ttft p99={m['ttft_s']['p99'] * 1e3:7.3f}ms  "
+            f"tpot p99={m['tpot_s']['p99'] * 1e6:7.1f}us  "
+            f"e2e p99={m['e2e_s']['p99'] * 1e3:7.3f}ms")
+    return "\n".join(out)
+
+
+def _round(x: float) -> float:
+    return round(float(x), 9)
+
+
+def smoke_drift(doc: Dict, golden: Dict) -> List[str]:
+    """Failures vs the committed golden (empty = clean)."""
+    drift: List[str] = []
+    for name in sorted(set(doc["policies"]) | set(golden["policies"])):
+        m = doc["policies"].get(name)
+        g = golden["policies"].get(name)
+        if m is None or g is None:
+            drift.append(f"{name}: {'missing' if m is None else 'new'} "
+                         f"vs golden")
+            continue
+        for k in _GATED:
+            if _round(m[k]) != _round(g[k]):
+                drift.append(f"{name}.{k}: {g[k]} -> {m[k]}")
+        for fam in _GATED_PCT:
+            for q in ("p50", "p95", "p99", "mean"):
+                if _round(m[fam][q]) != _round(g[fam][q]):
+                    drift.append(
+                        f"{name}.{fam}.{q}: {g[fam][q]} -> {m[fam][q]}")
+    # the serving invariant itself, independent of the golden
+    ms, mc = doc["policies"]["static"], doc["policies"]["continuous"]
+    if mc["throughput_tok_s"] < 0.95 * ms["throughput_tok_s"]:
+        drift.append("continuous throughput fell below static's")
+    if mc["tpot_s"]["p99"] >= ms["tpot_s"]["p99"]:
+        drift.append(
+            f"continuous p99 tpot {mc['tpot_s']['p99']} no longer "
+            f"beats static {ms['tpot_s']['p99']}")
+    return drift
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed golden (CI job)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help=f"rewrite {GOLDEN_PATH}")
+    ap.add_argument("--make-trace", action="store_true",
+                    help=f"regenerate {TRACE_PATH}")
+    ap.add_argument("--json", default="results/bench_serving.json",
+                    help="also write the measured doc here "
+                         "('' to skip)")
+    args = ap.parse_args(argv)
+
+    if args.make_trace:
+        make_trace()
+        if not (args.smoke or args.update_golden):
+            return 0
+    if not os.path.exists(TRACE_PATH):
+        print(f"trace {TRACE_PATH} missing "
+              f"(generate with --make-trace)")
+        return 1
+
+    doc = bench_doc()
+    print(report(doc))
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.update_golden:
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"golden updated: {GOLDEN_PATH}")
+        return 0
+    if args.smoke:
+        try:
+            with open(GOLDEN_PATH) as f:
+                golden = json.load(f)
+        except FileNotFoundError:
+            print(f"golden {GOLDEN_PATH} missing "
+                  f"(generate with --update-golden)")
+            return 1
+        drift = smoke_drift(doc, golden)
+        if drift:
+            print("SERVING BENCH DRIFT vs committed golden:")
+            for d in drift:
+                print(f"  {d}")
+            print("if the cost-model change is intentional, regenerate "
+                  "with `python -m benchmarks.bench_serve "
+                  "--update-golden` and commit the diff")
+            return 1
+        gc = golden["policies"]["continuous"]
+        print("golden: clean (committed continuous "
+              f"tok/s={gc['throughput_tok_s']:.0f}, "
+              f"p99 tpot={gc['tpot_s']['p99'] * 1e6:.1f}us)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

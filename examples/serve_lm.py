@@ -1,7 +1,10 @@
-"""Batched-request serving example (deliverable b).
+"""LM serving example on the CIM serving simulator.
 
-Serves three architecture families — dense+SWA ring cache, pure-SSM
-constant state, MoE expert-parallel — through the same decode path.
+Replays a seeded Poisson trace against a compiled CIM step-cost table
+and compares static vs continuous batching at the same offered load.
+(The earlier revision of this example drove the JAX training-side
+decode loop; serving now goes through ``repro.serve``, which prices
+decode steps on the CIM fidelity ladder with incremental KV staging.)
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,17 +13,23 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch import serve as serve_mod
+from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
+                         make_policy, poisson_trace)
 
 
 def main() -> int:
-    for arch, gen in [("h2o-danube-3-4b", 16), ("mamba2-780m", 16),
-                      ("olmoe-1b-7b", 16)]:
-        print(f"\n=== {arch} ===")
-        rc = serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
-                             "--prompt-len", "24", "--gen", str(gen)])
-        if rc:
-            return rc
+    cfg = ServeModelCfg(n_layers=2, d_model=128, n_heads=4, vocab=256,
+                        max_prompt=64, max_new=64)
+    print("compiling step-cost table (fidelity=trace) ...", flush=True)
+    table = StepCostTable(cfg, fidelity="trace")
+    trace = poisson_trace(rate=5000.0, n=200, seed=0)
+    for name in ("static", "continuous"):
+        sim = ServeSim(table, make_policy(name, max_batch=8))
+        m = sim.run(trace)
+        print(f"{name:<11s} tok/s={m['throughput_tok_s']:9.0f}  "
+              f"ttft p99={m['ttft_s']['p99'] * 1e3:6.2f}ms  "
+              f"tpot p99={m['tpot_s']['p99'] * 1e6:7.1f}us  "
+              f"e2e p99={m['e2e_s']['p99'] * 1e3:6.2f}ms")
     return 0
 
 

@@ -67,7 +67,7 @@ from .graph import CondensedGraph, Group
 from .isa import FLAGS, Instr, Isa, Program, SREG, VFUNCT, default_isa
 from .mapping import StagePlan
 from .oplevel import (Im2colSpec, MgAssign, OpSchedule, PoolSpec,
-                      ReplicaPlan, plan_stage)
+                      ReplicaPlan, incremental_ops, plan_stage)
 from .partition import PartitionResult
 
 __all__ = ["QuantParams", "GmemLayout", "StageProgram", "CompiledModel",
@@ -104,6 +104,9 @@ class GmemLayout:
     acts: Dict[Tuple[int, int], Tuple[int, int]] = \
         field(default_factory=dict)      # (gid, sample) -> (addr, nbytes)
     inputs: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    # graph-input op id -> byte offset within each per-sample input
+    # region (multi-input graphs, e.g. decode's token + KV caches)
+    input_offsets: Dict[int, int] = field(default_factory=dict)
     size: int = 0                        # bytes used (above GMEM_BASE)
 
     def alloc(self, nbytes: int) -> int:
@@ -534,6 +537,17 @@ def _main_and_skip_preds(cg: CondensedGraph, g: Group,
     return main, side
 
 
+def _main_input_op(cg: CondensedGraph, g: Group) -> Optional[int]:
+    """Graph-input op id the group's main operand reads (or None)."""
+    if cg.source is None:
+        return None
+    if g.anchor is not None:
+        ins = cg.source.ops[g.anchor].inputs
+        return ins[0] if ins else None
+    return next((s for i in g.op_ids for s in cg.source.ops[i].inputs
+                 if cg.source.ops[s].kind == "input"), None)
+
+
 # ---------------------------------------------------------------------------
 # Model compiler
 # ---------------------------------------------------------------------------
@@ -572,6 +586,12 @@ def _compile_model(result: PartitionResult, batch: Optional[int] = None,
 
     layout = GmemLayout()
     in_bytes = _graph_input_bytes(cg)
+    if cg.source is not None:
+        off = 0
+        for op in cg.source.ops:
+            if op.kind == "input":
+                layout.input_offsets[op.idx] = off
+                off += int(np.prod(op.out_shape))
     for s in range(batch):
         layout.inputs[s] = (layout.alloc(in_bytes), in_bytes)
 
@@ -896,6 +916,84 @@ def _emit_weight_load(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
             ctx.em(c).gld(b["bias"][c], addr, nb)
 
 
+def _emit_weight_load_incr(ctx: _Ctx, sched: OpSchedule,
+                           rep: ReplicaPlan) -> None:
+    """Append-row weight re-stage (``kv_append`` groups, samples > 0).
+
+    The appended producer row is resident at the tail of ``wsrc`` (the
+    incremental GLD in the sample loop); only the tiles it touches are
+    re-staged — the shapes come from :func:`~repro.core.oplevel.
+    incremental_ops`, the single shared definition trace prices:
+
+    * non-transpose (``P·V``): the new V row is one new weight *row*
+      per head — one ``n_len``-wide gather V_MOV and a single-row
+      ``CIM_LOAD`` at the row's array offset;
+    * transpose (``Q·Kᵀ``): the new K row is one new weight *column*
+      per head — a strided column gather, then a row-granular re-write
+      of the touched tile (``k_len`` = head-dim rows).
+
+    Timing-faithful emission (what trace and the perf simulator price);
+    functionally-exact decode would need per-assign ``wstage``
+    persistence, which the shared staging buffer does not provide —
+    decode runs on the perf/trace rungs of the ladder.
+    """
+    g = ctx.cg[sched.gid]
+    b = ctx.bufs[(sched.gid, rep.replica)]
+    row = sched.w_rows - 1
+    C = sched.w_row_bytes
+    gk, gn = g.gemm_k, g.gemm_n
+
+    def load(e: _Emitter, a: MgAssign, src: int, k_off: int,
+             rows: int) -> None:
+        e.sreg("MG_SEL", a.slot)
+        e.sreg("MG_KOFF", k_off)
+        e.sreg("MG_NOFF", a.n_off)
+        e.greg(1, src)
+        e.sreg("MG_NLEN", a.n_len)
+        e.raw("CIM_LOAD", mg=a.slot, src=1, rows=rows)
+
+    for a in rep.assigns:
+        if incremental_ops(g, sched, a) is None:
+            continue
+        e = ctx.em(a.core)
+        wsrc = b["wsrc"][a.core]
+        wstage = b["wstage"][a.core]
+        if a.ch_cnt > 1:
+            if sched.w_transpose:
+                for ci in range(a.ch_cnt):
+                    ch = a.ch_off + ci
+                    # new column `row` of head ch's diagonal block
+                    e.vec("mov",
+                          wstage + ci * gk * a.n_len + ci * gn + row,
+                          wsrc + row * C + ch * gk, 0, vlen=1, rep=gk,
+                          seg_d=a.n_len, seg_a=1, flags=FLAGS["i8"])
+                load(e, a, wstage, a.k_off, a.k_len)
+            else:
+                for ci in range(a.ch_cnt):
+                    ch = a.ch_off + ci
+                    lrow = ci * gk + row    # block-local weight row
+                    e.vec("mov", wstage + lrow * a.n_len + ci * gn,
+                          wsrc + row * C + ch * gn, 0, vlen=gn,
+                          flags=FLAGS["i8"])
+                    load(e, a, wstage + lrow * a.n_len,
+                         a.k_off + lrow, 1)
+            continue
+        ch = a.ch_off
+        if sched.w_transpose:
+            col = row - (a.n_off - ch * gn)
+            e.vec("mov", wstage + col,
+                  wsrc + row * C + ch * gk + (a.k_off - ch * gk), 0,
+                  vlen=1, rep=a.k_len, seg_d=a.n_len, seg_a=1,
+                  flags=FLAGS["i8"])
+            load(e, a, wstage, a.k_off, a.k_len)
+        else:
+            lrow = row - (a.k_off - ch * gk)
+            e.vec("mov", wstage + lrow * a.n_len,
+                  wsrc + row * C + ch * gn + (a.n_off - ch * gn), 0,
+                  vlen=a.n_len, flags=FLAGS["i8"])
+            load(e, a, wstage + lrow * a.n_len, a.k_off + lrow, 1)
+
+
 # ---------------------------------------------------------------------------
 # Per-sample emission
 # ---------------------------------------------------------------------------
@@ -920,6 +1018,11 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
     if main is None or main not in ctx.member:
         base, _ = (ctx.layout.inputs[s] if main is None
                    else ctx.layout.acts[(main, s)])
+        if main is None:
+            # multi-input graphs: offset to this group's input operand
+            # within the per-sample region (0 for single-input graphs)
+            base += ctx.layout.input_offsets.get(
+                _main_input_op(cg, g) or -1, 0)
         for c in rep.cores:
             ctx.em(c).gld(b["in"][c], base + need_lo, need_hi - need_lo)
     else:
@@ -977,17 +1080,33 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
 
     # ---- 1c. acquire dynamic weights (a predecessor's activations) ----------
     dynamic = sched.weight_source == "dynamic"
+    incr = False
     if dynamic:
         if spec is not None:
             raise CodegenError(f"{g.name}: dynamic weights on a conv "
                                f"anchor are not supported")
         wgid = sched.weight_pred
         w_nb = sched.w_rows * sched.w_row_bytes
+        # append-only cache (kv_append): samples > 0 fetch only the
+        # appended row into the resident wsrc and re-stage just the
+        # tiles it touches.  Needs a gmem-resident source (an in-stage
+        # producer re-SENDs its whole output every sample) and a
+        # single-round schedule (slot cycling leaves nothing resident).
+        incr = (sched.w_incremental and sched.n_rounds == 1 and s > 0
+                and (wgid is None or wgid not in ctx.member))
         if wgid is None or wgid not in ctx.member:
             base, _ = (ctx.layout.inputs[s] if wgid is None
                        else ctx.layout.acts[(wgid, s)])
-            for c in rep.cores:
-                ctx.em(c).gld(b["wsrc"][c], base, w_nb)
+            if wgid is None and sched.w_input is not None:
+                base += ctx.layout.input_offsets.get(sched.w_input, 0)
+            if incr:
+                off = (sched.w_rows - 1) * sched.w_row_bytes
+                for c in rep.cores:
+                    ctx.em(c).gld(b["wsrc"][c] + off, base + off,
+                                  sched.w_row_bytes)
+            else:
+                for c in rep.cores:
+                    ctx.em(c).gld(b["wsrc"][c], base, w_nb)
         else:
             prod = ctx.by_gid[wgid]
             _, prnb, ptot = _out_geometry(cg, prod)
@@ -1019,8 +1138,12 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
         for rnd in range(sched.n_rounds):
             # multi-round groups stream weights every sample (slots were
             # left holding the previous sample's last round); dynamic
-            # groups re-write their arrays every sample
-            if rnd > 0 or (sched.n_rounds > 1 and s > 0) or dynamic:
+            # groups re-write their arrays every sample — append-only
+            # caches re-stage just the appended row's tiles
+            if incr:
+                if rnd == 0:
+                    _emit_weight_load_incr(ctx, sched, rep)
+            elif rnd > 0 or (sched.n_rounds > 1 and s > 0) or dynamic:
                 _emit_weight_load(ctx, sched, rep, rnd)
             if spec is not None:
                 for y in range(y0, y1):

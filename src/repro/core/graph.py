@@ -304,6 +304,12 @@ class Group:
     # activations).  ``streamed`` is a mapping outcome, never set here.
     weight_source: str = WEIGHT_STATIC
     transpose_weights: bool = False     # dynamic: W = producer outputᵀ
+    # Append-only dynamic weights (KV-cached decode): across consecutive
+    # samples the weight operand grows by exactly one producer row, so
+    # the mapping/trace/codegen layers may price (and emit) an
+    # incremental re-gather of just the appended row instead of
+    # re-staging the whole buffer.  Set from ``attrs['kv_append']``.
+    weight_incremental: bool = False
 
     @property
     def is_mvm(self) -> bool:
@@ -458,7 +464,9 @@ class CondensedGraph:
                                and a.attrs.get("dynamic_weights")
                                else WEIGHT_STATIC),
                 transpose_weights=bool(
-                    a.attrs.get("transpose_weights")) if a else False))
+                    a.attrs.get("transpose_weights")) if a else False,
+                weight_incremental=bool(
+                    a.attrs.get("kv_append")) if a else False))
         return CondensedGraph(g.name, out, source=g)
 
 

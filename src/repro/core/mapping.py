@@ -312,8 +312,21 @@ class StagePlan:
             passes = g.gemm_m * b * a.tiles * m.macros_per_group
             ev["cim_macro_passes"] += passes
             if a.weight_source == "dynamic":
-                # macro arrays rewritten from activations every sample
-                ev["cim_weight_load_bytes"] += g.weight_bytes * a.dup * b
+                if g.weight_incremental and a.rounds == 1:
+                    # append-only cache: full staging once, then only
+                    # the appended row's tiles re-write per sample
+                    no = chip.core.cim.group_n_out
+                    if g.transpose_weights:
+                        incr_b = g.groups * g.gemm_k * min(g.gemm_n, no)
+                    else:
+                        incr_b = g.groups * g.gemm_n
+                    ev["cim_weight_load_bytes"] += (
+                        g.weight_bytes + incr_b * max(b - 1, 0)) * a.dup
+                else:
+                    # macro arrays rewritten from activations every
+                    # sample
+                    ev["cim_weight_load_bytes"] += g.weight_bytes \
+                        * a.dup * b
             elif a.weight_source == "streamed":
                 ev["cim_weight_load_bytes"] += a.load_bytes * b
             else:
@@ -321,7 +334,15 @@ class StagePlan:
             ev["vector_elems"] += g.vector_elems * b
             halo = self.params.dup_halo if (g.gemm_m > 1 and a.dup > 1) \
                 else 0.0
-            in_traffic = g.in_bytes * (1 + halo * (a.dup - 1) / a.dup) * b
+            in_bytes = g.in_bytes
+            if a.weight_source == "dynamic" and g.weight_incremental \
+                    and a.rounds == 1:
+                # the cache operand is part of in_bytes, but append-only
+                # growth only moves the new row per steady-state sample
+                row_b = (g.gemm_k if g.transpose_weights
+                         else g.gemm_n) * g.groups
+                in_bytes = max(in_bytes - g.weight_bytes, 0) + row_b
+            in_traffic = in_bytes * (1 + halo * (a.dup - 1) / a.dup) * b
             if a.boundary_in:
                 ev["gmem_bytes"] += in_traffic
             else:
@@ -407,21 +428,42 @@ def _alloc_group(g: Group, chip: ChipConfig, params: CostParams,
     # the dynamic multi-round path additionally re-loads per m-chunk,
     # which only op-level planning can see — trace prices it exactly.)
     if source != "static":
-        rows_pc = math.ceil(ncol / cores) * column_rows(g, chip)
-        compute += m.weight_load_cycles(rows_pc)
-        if source == "dynamic":
-            # gather-transpose staging of the producer's activations
-            # into the CIM write layout (vector unit, per core)
-            w_elems = g.gemm_k * g.gemm_n * g.groups
-            vector += m.vector_cycles(
-                "mov", math.ceil(w_elems / max(cores, 1)))
+        if source == "dynamic" and g.weight_incremental and rounds == 1:
+            # append-only (KV-cache) steady state: only the tiles
+            # covering the appended producer row re-stage — per head,
+            # one column (row-granular tile rewrite of the head dim)
+            # for Q·Kᵀ, one weight row for P·V.  O(1) in the cache
+            # length; sample 0's full staging amortizes away (trace
+            # prices it exactly).
+            heads_pc = math.ceil(max(g.groups, 1) / max(cores, 1))
+            if g.transpose_weights:
+                compute += m.weight_load_cycles(heads_pc * g.gemm_k)
+                vector += m.vector_cycles("mov", heads_pc * g.gemm_k)
+            else:
+                compute += m.weight_load_cycles(heads_pc)
+                vector += m.vector_cycles("mov", heads_pc * g.gemm_n)
+        else:
+            rows_pc = math.ceil(ncol / cores) * column_rows(g, chip)
+            compute += m.weight_load_cycles(rows_pc)
+            if source == "dynamic":
+                # gather-transpose staging of the producer's activations
+                # into the CIM write layout (vector unit, per core)
+                w_elems = g.gemm_k * g.gemm_n * g.groups
+                vector += m.vector_cycles(
+                    "mov", math.ceil(w_elems / max(cores, 1)))
 
     # Input delivery.  Replicas own disjoint spatial/batch slices: each
     # receives in_bytes/dup (+ conv halo) over its own mesh port, so the
     # per-sample comm interval scales down with duplication — this is the
     # communication side of the paper's duplicate-vs-communicate trade-off.
     halo = params.dup_halo if (g.gemm_m > 1 and dup > 1) else 0.0
-    in_traffic = g.in_bytes * (1 + halo * (dup - 1) / dup)
+    in_bytes = g.in_bytes
+    if source == "dynamic" and g.weight_incremental and rounds == 1:
+        # cache operand rides in in_bytes; append-only growth streams
+        # one new row per steady-state sample, not the whole buffer
+        row_b = (g.gemm_k if g.transpose_weights else g.gemm_n) * g.groups
+        in_bytes = max(in_bytes - g.weight_bytes, 0) + row_b
+    in_traffic = in_bytes * (1 + halo * (dup - 1) / dup)
     comm_gmem = 0.0
     if boundary_in:
         # gmem streams are a shared resource

@@ -32,7 +32,7 @@ from .graph import (WEIGHT_DYNAMIC, WEIGHT_STATIC, WEIGHT_STREAMED,
 from .mapping import GroupAlloc, StagePlan
 
 __all__ = ["Im2colSpec", "MgAssign", "ReplicaPlan", "OpSchedule",
-           "plan_group", "plan_stage", "MAX_REP"]
+           "plan_group", "plan_stage", "incremental_ops", "MAX_REP"]
 
 MAX_REP = 511          # CIM_MVM imm10 repetition bound
 
@@ -133,6 +133,12 @@ class OpSchedule:
     w_rows: int = 0                     # producer output rows
     w_row_bytes: int = 0                # producer output row bytes
     w_transpose: bool = False           # W = producer outputᵀ (Q·Kᵀ)
+    # append-only weight growth (KV-cached decode): samples s > 0 may
+    # re-stage only the appended producer row (see incremental_ops)
+    w_incremental: bool = False
+    # graph-input op id of the weight operand when weight_pred is None
+    # (multi-input graphs: codegen offsets the per-sample gmem region)
+    w_input: Optional[int] = None
 
     @property
     def n_chunks(self) -> int:
@@ -357,8 +363,11 @@ def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
         if op_owner is None:
             op_owner = {i: grp.idx for grp in cg for i in grp.op_ids}
         w_pred = op_owner.get(wop.idx)          # None => graph input
+        w_input = wop.idx if w_pred is None else None
         w_row_bytes = int(wop.out_shape[-1]) * wop.act_bits // 8
         w_rows = max(1, wop.out_elems // max(int(wop.out_shape[-1]), 1))
+    else:
+        w_input = None
     source = (WEIGHT_DYNAMIC if dynamic
               else WEIGHT_STREAMED if n_rounds > 1 else WEIGHT_STATIC)
 
@@ -368,7 +377,57 @@ def plan_group(cg: CondensedGraph, g: Group, alloc: GroupAlloc,
         im2col=spec, vector_ops=vops, pool=pool, gap=gap,
         weight_bits=g.weight_bits, n_rounds=n_rounds,
         weight_source=source, weight_pred=w_pred, w_rows=w_rows,
-        w_row_bytes=w_row_bytes, w_transpose=g.transpose_weights)
+        w_row_bytes=w_row_bytes, w_transpose=g.transpose_weights,
+        w_incremental=bool(dynamic and g.weight_incremental),
+        w_input=w_input)
+
+
+def incremental_ops(g: Group, sched: OpSchedule, a: MgAssign
+                    ) -> Optional[Tuple[List[int], List[int]]]:
+    """Append-row re-stage shape for one MG assign, or ``None``.
+
+    For a ``kv_append`` dynamic group, samples ``s > 0`` differ from
+    sample ``s-1`` in exactly one producer row — the appended cache
+    entry ``w_rows - 1``.  This helper is the single definition of
+    *which* tiles that row touches and *what* it costs, shared by
+    codegen (instruction emission) and trace (unit pricing) so the two
+    cannot drift:
+
+    * non-transpose (``P·V``): the appended V row is one new *weight
+      row*; gather one ``n_len``-wide row per packed head and CIM-write
+      it with a single-row ``CIM_LOAD`` (array writes are
+      row-granular, so an appended row costs exactly one row write).
+    * transpose (``Q·Kᵀ``): the appended K row is one new *weight
+      column*; gather one ``k_len``-deep column per packed head, but
+      the row-granular array write must re-write the whole touched
+      tile (``k_len`` rows) — still O(1) in the cache length, since
+      ``k_len`` is the head dimension.
+
+    Returns ``(gather_elems, load_rows)``: per-V_MOV element counts and
+    per-CIM_LOAD row counts, or ``None`` when the assign's tile does
+    not cover the appended row.  Only meaningful for single-round
+    schedules (multi-round slot cycling leaves nothing resident).
+    """
+    if not (sched.w_incremental and sched.weight_source == WEIGHT_DYNAMIC):
+        return None
+    row = sched.w_rows - 1
+    gk, gn = g.gemm_k, g.gemm_n
+    if a.ch_cnt > 1:
+        # block-diagonal packed tile: every packed head's block spans
+        # the full per-head K and N, so the appended row always lands
+        if sched.w_transpose:
+            return [gk] * a.ch_cnt, [a.k_len]
+        return [gn] * a.ch_cnt, [1] * a.ch_cnt
+    ch = a.ch_off
+    if sched.w_transpose:
+        n0 = a.n_off - ch * gn          # tile-local cache-row window
+        if not n0 <= row < n0 + a.n_len:
+            return None
+        return [a.k_len], [a.k_len]
+    k0 = a.k_off - ch * gk
+    if not k0 <= row < k0 + a.k_len:
+        return None
+    return [a.n_len], [1]
 
 
 def plan_stage(cg: CondensedGraph, stage: StagePlan,

@@ -47,7 +47,8 @@ from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
 from .graph import CondensedGraph
 from .machine import Calibration, MachineModel, machine_for
 from .mapping import StagePlan
-from .oplevel import OpSchedule, ReplicaPlan, plan_stage
+from .oplevel import (OpSchedule, ReplicaPlan, incremental_ops,
+                      plan_stage)
 from .partition import PartitionResult
 
 __all__ = ["TraceReport", "TraceEngine", "trace_model"]
@@ -108,6 +109,12 @@ class _Profile:
     dyn_w: Optional[Tuple[int, int, bool]] = None   # (gid|-1, nb, in_stage)
     dyn_gather_vec: float = 0.0       # gather V_MOVs (per core, max)
     dyn_load_cim: float = 0.0         # CIM_LOAD cycles, all rounds
+    # append-only (kv_append) staging: samples > 0 fetch one producer
+    # row and re-stage only the tiles it touches (incremental_ops)
+    dyn_w_incr: bool = False
+    dyn_w_row_nb: int = 0             # appended-row bytes
+    dyn_gather_vec_incr: float = 0.0  # per-core max, incremental gather
+    dyn_load_cim_incr: float = 0.0    # per-core max, incremental load
 
 
 def _chunk_shapes(sched: OpSchedule, rep: ReplicaPlan,
@@ -182,6 +189,24 @@ def _profile(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
                    sched.w_rows * sched.w_row_bytes,
                    sched.weight_pred is not None
                    and sched.weight_pred in member)
+        if sched.w_incremental and sched.n_rounds == 1:
+            # append-only staging (codegen's incremental emission):
+            # per-core cost of re-staging just the appended row's tiles
+            gv: Dict[int, float] = {}
+            lc: Dict[int, float] = {}
+            for a in rep.assigns:
+                ops = incremental_ops(g, sched, a)
+                if ops is None:
+                    continue
+                movs, loads = ops
+                gv[a.core] = gv.get(a.core, 0.0) + sum(
+                    m.vector_cycles("mov", e) for e in movs)
+                lc[a.core] = lc.get(a.core, 0.0) + sum(
+                    m.weight_load_cycles(r) for r in loads)
+            p.dyn_w_incr = True
+            p.dyn_w_row_nb = sched.w_row_bytes
+            p.dyn_gather_vec_incr = max(gv.values(), default=0.0)
+            p.dyn_load_cim_incr = max(lc.values(), default=0.0)
     else:
         p.prologue_cim = by_round.get(0, 0.0)
         p.reload_cim_tail = sum(v for r, v in by_round.items() if r > 0)
@@ -426,6 +451,11 @@ class TraceEngine:
                     # gather/CIM-write staging (local memory, no gmem)
                     if p.dyn_w is not None:
                         wgid, w_nb, in_stage = p.dyn_w
+                        # append-only cache: steady-state samples fetch
+                        # one row and re-stage only the touched tiles
+                        # (in-stage producers re-send the full buffer
+                        # every sample, so incremental needs gmem src)
+                        incr = p.dyn_w_incr and s > 0 and not in_stage
                         if in_stage:
                             for pr in range(len(by_gid[wgid].replicas)):
                                 arr = fin[(wgid, pr, s)] + cal.noc * (
@@ -433,15 +463,19 @@ class TraceEngine:
                                     + m.link_occupancy_cycles(w_nb))
                                 t = max(t, arr)
                         elif w_nb:
-                            t = self._gmem(ports, w_nb * len(rep.cores),
+                            nb = p.dyn_w_row_nb if incr else w_nb
+                            t = self._gmem(ports, nb * len(rep.cores),
                                            t, streams=len(rep.cores))
-                        t += (p.dyn_gather_vec * cal.vector
-                              + p.dyn_load_cim * cal.load)
+                        gv = p.dyn_gather_vec_incr if incr \
+                            else p.dyn_gather_vec
+                        lc = p.dyn_load_cim_incr if incr \
+                            else p.dyn_load_cim
+                        t += gv * cal.vector + lc * cal.load
                         nc = len(rep.cores)
                         busy["vector"] = busy.get("vector", 0.0) \
-                            + p.dyn_gather_vec * nc
+                            + gv * nc
                         busy["cim"] = busy.get("cim", 0.0) \
-                            + p.dyn_load_cim * nc
+                            + lc * nc
                     # per-sample weight re-streaming (streamed source)
                     rl_bytes = p.reload_gld_bytes_full if s \
                         else p.reload_gld_bytes_tail

@@ -19,7 +19,8 @@ from .graph import Graph, Op
 
 __all__ = [
     "resnet18", "vgg19", "mobilenetv2", "efficientnetb0",
-    "transformer_lm", "tiny_cnn", "WORKLOADS", "build",
+    "transformer_lm", "transformer_decode", "tiny_cnn", "WORKLOADS",
+    "build",
 ]
 
 
@@ -218,6 +219,70 @@ def transformer_lm(n_layers: int = 4, d_model: int = 512, n_heads: int = 8,
     return g
 
 
+def transformer_decode(n_layers: int = 2, d_model: int = 128,
+                       n_heads: int = 4, d_ff: Optional[int] = None,
+                       kv_len: int = 64, vocab: int = 256,
+                       incremental: bool = True) -> Graph:
+    """One KV-cached decode step (seq=1) against a ``kv_len``-entry cache.
+
+    The per-layer K/V caches are *graph inputs* ``(kv_len, d_model)``
+    serving as the attention matmuls' dynamic-weight operands — the
+    gmem-resident cache the chip streams into its macro groups.  The
+    new token's K/V projections are emitted as boundary outputs (the
+    cache-append write-back); they do not feed this step's attention,
+    which reads the already-appended ``kv_len``-entry cache.
+
+    ``incremental=True`` marks both attention matmuls ``kv_append``:
+    across consecutive samples the cache differs only in its last row,
+    so mapping/trace/codegen price an append-row re-stage (O(1) per
+    step in ``kv_len``) instead of re-gathering the whole buffer.  With
+    ``incremental=False`` the full per-sample re-stage of the dynamic
+    path is priced — the O(kv_len) baseline the serving regression
+    test compares against.
+    """
+    d_ff = d_ff or 4 * d_model
+    dh = d_model // n_heads
+    g = Graph(f"decode_{n_layers}L_{d_model}d_kv{kv_len}")
+    x = g.input("token", (1, d_model))      # current-token embedding
+    caches = [(g.input(f"l{li}.k_cache", (kv_len, d_model)),
+               g.input(f"l{li}.v_cache", (kv_len, d_model)))
+              for li in range(n_layers)]
+    x = g.linear("embed", x, cout=d_model, bias=False)
+    attn_attrs = {"dynamic_weights": True}
+    if incremental:
+        attn_attrs["kv_append"] = True
+
+    def mha(name: str, src: int, kc: int, vc: int) -> int:
+        q = g.linear(f"{name}.q", src, cout=d_model, bias=False)
+        # cache-append write-back of the new token's K/V row (boundary
+        # outputs: no in-graph consumer, spilled to gmem)
+        g.linear(f"{name}.k", src, cout=d_model, bias=False)
+        g.linear(f"{name}.v", src, cout=d_model, bias=False)
+        # scores = q @ K_cacheᵀ : per-head (1 x dh) @ (dh x kv_len)
+        sc = g.add(Op(name=f"{name}.scores", kind="matmul",
+                      inputs=(q, kc), out_shape=(n_heads, 1, kv_len),
+                      gemm_m=1, gemm_k=dh, gemm_n=kv_len, groups=n_heads,
+                      attrs=dict(attn_attrs, transpose_weights=True)))
+        sm = g.unary(f"{name}.softmax", "softmax", sc)
+        ctx = g.add(Op(name=f"{name}.ctx", kind="matmul",
+                       inputs=(sm, vc), out_shape=(1, d_model),
+                       gemm_m=1, gemm_k=kv_len, gemm_n=dh, groups=n_heads,
+                       attrs=dict(attn_attrs)))
+        o = g.linear(f"{name}.o", ctx, cout=d_model, bias=False)
+        r = g.eltwise(f"{name}.res", "add", o, src)
+        return g.unary(f"{name}.ln", "layernorm", r)
+
+    for li in range(n_layers):
+        kc, vc = caches[li]
+        x = mha(f"l{li}.attn", x, kc, vc)
+        y = g.linear(f"l{li}.up", x, cout=d_ff, bias=False, act="gelu")
+        y = g.linear(f"l{li}.down", y, cout=d_model, bias=False)
+        y = g.eltwise(f"l{li}.res2", "add", y, x)
+        x = g.unary(f"l{li}.ln2", "layernorm", y)
+    g.linear("lm_head", x, cout=vocab, bias=False)
+    return g
+
+
 # ---------------------------------------------------------------------------
 # Tiny CNN — used by the compile-and-run (ISS vs JAX oracle) tests
 # ---------------------------------------------------------------------------
@@ -240,6 +305,7 @@ WORKLOADS = {
     "mobilenetv2": mobilenetv2,
     "efficientnetb0": efficientnetb0,
     "transformer": transformer_lm,
+    "transformer_decode": transformer_decode,
     "tiny_cnn": tiny_cnn,
 }
 

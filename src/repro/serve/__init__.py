@@ -1,0 +1,41 @@
+"""repro.serve: request-level LM serving simulator on the CIM stack.
+
+Replays arrival traces (Poisson / bursty / file) against compiled CIM
+artifacts with prefill/decode disaggregation, static or continuous
+(iteration-level) batching, and KV-cache admission control.  Step
+costs come from the fidelity ladder — the decode path uses the
+append-row (``kv_append``) incremental weight staging so a decode
+step is O(1) in KV length.
+
+Quick start::
+
+    python -m repro.serve --trace poisson --rate 8 --requests 200 \\
+        --fidelity trace
+
+or programmatically::
+
+    from repro.serve import (ServeModelCfg, StepCostTable, ServeSim,
+                             make_policy, poisson_trace)
+    table = StepCostTable(ServeModelCfg(), fidelity="trace")
+    sim = ServeSim(table, make_policy("continuous", max_batch=8))
+    metrics = sim.run(poisson_trace(rate=8.0, n=200, seed=0))
+"""
+from .bucketing import (bucket_batch_sizes, bucket_boundaries,
+                        bucket_for, group_by_bucket)
+from .metrics import RequestRecord, metrics_json, percentile, summarize
+from .policy import (POLICIES, Batcher, ContinuousBatcher,
+                     StaticBatcher, make_policy)
+from .trace_replay import (Request, ServeSim, bursty_trace, load_trace,
+                           poisson_trace, save_trace)
+from .workload import ServeModelCfg, StepCostTable
+
+__all__ = [
+    "Request", "ServeSim", "poisson_trace", "bursty_trace",
+    "load_trace", "save_trace",
+    "ServeModelCfg", "StepCostTable",
+    "Batcher", "StaticBatcher", "ContinuousBatcher", "make_policy",
+    "POLICIES",
+    "RequestRecord", "percentile", "summarize", "metrics_json",
+    "bucket_boundaries", "bucket_for", "bucket_batch_sizes",
+    "group_by_bucket",
+]

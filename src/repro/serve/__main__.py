@@ -1,0 +1,112 @@
+"""CLI for the serving simulator.
+
+Examples::
+
+    python -m repro.serve --trace poisson --rate 8 --requests 200 \\
+        --fidelity trace
+    python -m repro.serve --trace bursty --rate 6 --requests 100 \\
+        --policy static
+    python -m repro.serve --trace file --trace-file t.json \\
+        --policy both --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List
+
+from .metrics import metrics_json
+from .policy import POLICIES, make_policy
+from .trace_replay import (Request, ServeSim, bursty_trace, load_trace,
+                           poisson_trace)
+from .workload import ServeModelCfg, StepCostTable
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="Request-level CIM LM serving simulator")
+    p.add_argument("--trace", choices=("poisson", "bursty", "file"),
+                   default="poisson")
+    p.add_argument("--trace-file", help="JSON trace for --trace file")
+    p.add_argument("--rate", type=float, default=8.0,
+                   help="mean arrival rate, req/s")
+    p.add_argument("--requests", type=int, default=200)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--burst", type=float, default=3.0,
+                   help="bursty: on-phase rate multiplier")
+    p.add_argument("--fidelity",
+                   choices=("analytic", "trace", "simulate"),
+                   default="trace")
+    p.add_argument("--policy",
+                   choices=tuple(sorted(POLICIES)) + ("both",),
+                   default="continuous")
+    p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--kv-frac", type=float, default=0.5,
+                   help="fraction of global memory reserved for KV")
+    p.add_argument("--n-layers", type=int, default=2)
+    p.add_argument("--d-model", type=int, default=128)
+    p.add_argument("--n-heads", type=int, default=4)
+    p.add_argument("--vocab", type=int, default=256)
+    p.add_argument("--max-prompt", type=int, default=64)
+    p.add_argument("--max-new", type=int, default=64)
+    p.add_argument("--no-incremental", action="store_true",
+                   help="price decode with full KV re-staging")
+    p.add_argument("--json", help="write metrics JSON here")
+    return p
+
+
+def _trace(args: argparse.Namespace) -> List[Request]:
+    if args.trace == "file":
+        if not args.trace_file:
+            raise SystemExit("--trace file requires --trace-file")
+        return load_trace(args.trace_file)
+    kw = dict(rate=args.rate, n=args.requests, seed=args.seed,
+              max_prompt=args.max_prompt, max_new=args.max_new)
+    if args.trace == "bursty":
+        return bursty_trace(burst=args.burst, **kw)
+    return poisson_trace(**kw)
+
+
+def _report(m: Dict[str, Any]) -> str:
+    t, p = m["ttft_s"], m["tpot_s"]
+    return (
+        f"policy={m['policy']:<11s} req={m['requests']} "
+        f"tok/s={m['throughput_tok_s']:8.1f} "
+        f"ttft p50={t['p50'] * 1e3:7.2f}ms p95={t['p95'] * 1e3:7.2f}ms "
+        f"p99={t['p99'] * 1e3:7.2f}ms  "
+        f"tpot p50={p['p50'] * 1e6:6.1f}us p99={p['p99'] * 1e6:6.1f}us")
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    cfg = ServeModelCfg(
+        n_layers=args.n_layers, d_model=args.d_model,
+        n_heads=args.n_heads, vocab=args.vocab,
+        max_prompt=args.max_prompt, max_new=args.max_new)
+    print(f"compiling step costs (fidelity={args.fidelity}) ...",
+          flush=True)
+    table = StepCostTable(cfg, fidelity=args.fidelity,
+                          incremental=not args.no_incremental)
+    requests = _trace(args)
+    policies = sorted(POLICIES) if args.policy == "both" \
+        else [args.policy]
+    results: Dict[str, Any] = {}
+    for name in policies:
+        sim = ServeSim(table, make_policy(name, args.max_batch),
+                       kv_frac=args.kv_frac)
+        m = sim.run(requests)
+        results[name] = m
+        print(_report(m))
+    if args.json:
+        payload = results if len(results) > 1 \
+            else results[policies[0]]
+        with open(args.json, "w") as f:
+            f.write(metrics_json(payload))
+            f.write("\n")
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

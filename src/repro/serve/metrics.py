@@ -1,0 +1,115 @@
+"""Latency/throughput metrics for the serving simulator.
+
+Everything here is deterministic: percentiles use linear interpolation
+on the sorted sample (no RNG, no numpy), and the JSON serialisation
+sorts keys and rounds floats so the same simulation produces the same
+bytes on every run — the property the determinism test and the CI
+golden gate rely on.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Sequence
+
+__all__ = ["RequestRecord", "percentile", "summarize", "metrics_json"]
+
+_ROUND = 9  # digits kept when serialising floats
+
+
+@dataclass
+class RequestRecord:
+    """Per-request timeline collected by the simulator (seconds)."""
+    rid: int
+    t_arrive: float
+    prompt_len: int
+    gen_len: int
+    t_prefill_start: float = 0.0
+    t_first_token: float = 0.0
+    t_complete: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_arrive
+
+    @property
+    def tpot(self) -> float:
+        """Mean inter-token latency after the first token."""
+        if self.gen_len <= 1:
+            return 0.0
+        return (self.t_complete - self.t_first_token) / (self.gen_len - 1)
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile of ``values`` (``q`` in [0,100])."""
+    if not values:
+        return 0.0
+    if not 0.0 <= q <= 100.0:
+        raise ValueError("q must be in [0, 100]")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    pos = q / 100.0 * (len(xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = pos - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def summarize(records: Sequence[RequestRecord],
+              extra: Mapping[str, Any] | None = None) -> Dict[str, Any]:
+    """Aggregate request records into the canonical metrics dict."""
+    ttfts = [r.ttft for r in records]
+    tpots = [r.tpot for r in records if r.gen_len > 1]
+    e2es = [r.t_complete - r.t_arrive for r in records]
+    toks = sum(r.gen_len for r in records)
+    if records:
+        t0 = min(r.t_arrive for r in records)
+        t1 = max(r.t_complete for r in records)
+        makespan = max(t1 - t0, 1e-12)
+    else:
+        makespan = 0.0
+    out: Dict[str, Any] = {
+        "requests": len(records),
+        "tokens": toks,
+        "makespan_s": makespan,
+        "throughput_tok_s": toks / makespan if makespan else 0.0,
+        "throughput_req_s": len(records) / makespan if makespan else 0.0,
+        "ttft_s": {
+            "p50": percentile(ttfts, 50),
+            "p95": percentile(ttfts, 95),
+            "p99": percentile(ttfts, 99),
+            "mean": sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        },
+        "tpot_s": {
+            "p50": percentile(tpots, 50),
+            "p95": percentile(tpots, 95),
+            "p99": percentile(tpots, 99),
+            "mean": sum(tpots) / len(tpots) if tpots else 0.0,
+        },
+        "e2e_s": {
+            "p50": percentile(e2es, 50),
+            "p95": percentile(e2es, 95),
+            "p99": percentile(e2es, 99),
+            "mean": sum(e2es) / len(e2es) if e2es else 0.0,
+        },
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+def _rounded(obj: Any) -> Any:
+    if isinstance(obj, float):
+        return round(obj, _ROUND)
+    if isinstance(obj, dict):
+        return {k: _rounded(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_rounded(v) for v in obj]
+    return obj
+
+
+def metrics_json(metrics: Mapping[str, Any]) -> str:
+    """Canonical (sorted, rounded) JSON — byte-stable across runs."""
+    return json.dumps(_rounded(dict(metrics)), sort_keys=True, indent=2)

@@ -1,0 +1,153 @@
+"""Serving-side cost model: compiled step-latency tables.
+
+The serving simulator never prices a token by running the compiler in
+its event loop.  Instead, :class:`StepCostTable` compiles the prefill
+workload (``transformer_lm``) and the decode workload
+(``transformer_decode``, incremental KV append) once per *length
+bucket* on the chosen fidelity rung, and memoises the results:
+
+* prefill: seconds to process a prompt of each bucketed length
+  (batch 1 — the prefill engine runs prompts back to back);
+* decode: an affine fit ``base + per_seq × batch`` per KV bucket,
+  obtained from a batch-1 and a batch-K evaluation of the same
+  artifact.  An iteration over a mixed batch is then priced in O(batch)
+  as ``base(max bucket) + Σ per_seq(bucket_i)``.
+
+Because the decode workload uses the append-row (``kv_append``)
+weight path, ``per_seq`` stays O(1) in the KV length — the property
+the regression test in ``tests/test_serve.py`` pins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.arch import ChipConfig, default_chip
+from ..flow import CompileOptions, compile as flow_compile
+from .bucketing import bucket_boundaries, bucket_for
+
+__all__ = ["ServeModelCfg", "StepCostTable"]
+
+
+@dataclass(frozen=True)
+class ServeModelCfg:
+    """Model served by the simulator (mirrors the workload builders)."""
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: Optional[int] = None
+    vocab: int = 256
+    max_prompt: int = 64
+    max_new: int = 64
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_prompt + self.max_new
+
+    def kv_bytes(self, kv_len: int) -> int:
+        """Resident KV-cache footprint at ``kv_len`` tokens (int8 K+V)."""
+        return 2 * self.n_layers * kv_len * self.d_model
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "n_layers": self.n_layers, "d_model": self.d_model,
+            "n_heads": self.n_heads, "d_ff": self.d_ff,
+            "vocab": self.vocab, "max_prompt": self.max_prompt,
+            "max_new": self.max_new,
+        }
+
+
+class StepCostTable:
+    """Bucketed prefill/decode step costs from compiled artifacts."""
+
+    def __init__(self, cfg: ServeModelCfg,
+                 chip: Optional[ChipConfig] = None,
+                 fidelity: str = "trace",
+                 bucket_step: float = 2.0,
+                 fit_batch: int = 8,
+                 incremental: bool = True) -> None:
+        if fit_batch < 2:
+            raise ValueError("fit_batch must be >= 2 for an affine fit")
+        self.cfg = cfg
+        self.chip = chip if chip is not None else default_chip()
+        self.fidelity = fidelity
+        self.fit_batch = fit_batch
+        self.incremental = incremental
+        self._hz = self.chip.clock_ghz * 1e9
+        self.prefill_buckets = bucket_boundaries(
+            cfg.max_prompt, step=bucket_step)
+        self.decode_buckets = bucket_boundaries(
+            cfg.max_seq, step=bucket_step)
+        self._prefill_s: Dict[int, float] = {}
+        self._decode_base_s: Dict[int, float] = {}
+        self._decode_per_seq_s: Dict[int, float] = {}
+        self._build()
+
+    # -- construction -------------------------------------------------
+
+    def _compile(self, workload: str, kw: Dict[str, Any]):
+        return flow_compile(workload, self.chip, CompileOptions(
+            workload_kw=kw, fidelity=self.fidelity, batch=1))
+
+    def _build(self) -> None:
+        c = self.cfg
+        for b in self.prefill_buckets:
+            kw = dict(n_layers=c.n_layers, d_model=c.d_model,
+                      n_heads=c.n_heads, d_ff=c.d_ff, seq=b,
+                      vocab=c.vocab)
+            art = self._compile("transformer", kw)
+            self._prefill_s[b] = float(
+                art.evaluate().cycles) / self._hz
+        k = self.fit_batch
+        for b in self.decode_buckets:
+            kw = dict(n_layers=c.n_layers, d_model=c.d_model,
+                      n_heads=c.n_heads, d_ff=c.d_ff, kv_len=b,
+                      vocab=c.vocab, incremental=self.incremental)
+            art = self._compile("transformer_decode", kw)
+            c1 = float(art.evaluate().cycles)
+            # batch-K rides the same partition: replace_options keeps
+            # the compiled plan and only re-prices the sample loop
+            ck = float(art.replace_options(batch=k).evaluate().cycles)
+            per = max((ck - c1) / (k - 1), 0.0)
+            self._decode_per_seq_s[b] = per / self._hz
+            self._decode_base_s[b] = max(c1 - per, 0.0) / self._hz
+
+    # -- queries ------------------------------------------------------
+
+    def prefill_s(self, prompt_len: int) -> float:
+        return self._prefill_s[bucket_for(prompt_len,
+                                          self.prefill_buckets)]
+
+    def decode_base_s(self, kv_len: int) -> float:
+        return self._decode_base_s[bucket_for(kv_len,
+                                              self.decode_buckets)]
+
+    def decode_per_seq_s(self, kv_len: int) -> float:
+        return self._decode_per_seq_s[bucket_for(kv_len,
+                                                 self.decode_buckets)]
+
+    def iteration_s(self, kv_lens: Sequence[int]) -> float:
+        """Price one decode iteration over a mixed batch, O(batch)."""
+        if not kv_lens:
+            return 0.0
+        return (self.decode_base_s(max(kv_lens))
+                + sum(self.decode_per_seq_s(n) for n in kv_lens))
+
+    def kv_bytes(self, kv_len: int) -> int:
+        return self.cfg.kv_bytes(kv_len)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "fidelity": self.fidelity,
+            "fit_batch": self.fit_batch,
+            "incremental": self.incremental,
+            "model": self.cfg.to_dict(),
+            "prefill_s": {str(k): v
+                          for k, v in sorted(self._prefill_s.items())},
+            "decode_base_s": {
+                str(k): v
+                for k, v in sorted(self._decode_base_s.items())},
+            "decode_per_seq_s": {
+                str(k): v
+                for k, v in sorted(self._decode_per_seq_s.items())},
+        }

@@ -1,0 +1,250 @@
+"""Serving-simulator suite: repro.serve on the CIM fidelity ladder.
+
+Covers the ISSUE-6 acceptance surface:
+
+* determinism — same trace + seed produce byte-identical metrics JSON;
+* fidelity agreement — decode-step trace cycles stay inside the
+  documented trace band of the perf simulator on a tiny config;
+* the incremental (append-row) KV path — per-decode-step marginal cost
+  is O(1) in KV length (so a full generation is O(seq), not O(seq²)),
+  and strictly cheaper than full re-staging;
+* length-bucketed admission (tensor2tensor ``data_reader`` idiom);
+* continuous (iteration-level) batching beats static batching on p99
+  per-token latency at equal offered load near saturation;
+* KV admission control never overshoots its budget.
+"""
+
+import json
+
+import pytest
+
+from repro import flow
+from repro.core.arch import default_chip
+from repro.flow import CompileOptions
+from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
+                         bucket_batch_sizes, bucket_boundaries,
+                         bucket_for, bursty_trace, group_by_bucket,
+                         load_trace, make_policy, metrics_json,
+                         percentile, poisson_trace, save_trace)
+
+# trace / perf agreement band, as documented in tests/test_fidelity.py
+TRACE_BAND = (0.5, 2.0)
+
+TINY = dict(n_layers=1, d_model=64, n_heads=2, vocab=64)
+
+
+@pytest.fixture(scope="module")
+def chip():
+    return default_chip()
+
+
+@pytest.fixture(scope="module")
+def table(chip):
+    cfg = ServeModelCfg(max_prompt=16, max_new=16, **TINY)
+    return StepCostTable(cfg, chip=chip, fidelity="trace")
+
+
+def _decode_cycles(chip, kv_len, batch, incremental, fidelity="trace"):
+    kw = dict(kv_len=kv_len, incremental=incremental, **TINY)
+    art = flow.compile("transformer_decode", chip, CompileOptions(
+        workload_kw=kw, fidelity=fidelity, batch=batch))
+    return float(art.evaluate().cycles)
+
+
+# --------------------------------------------------------------------
+# Bucketing
+# --------------------------------------------------------------------
+
+def test_bucket_boundaries_cover_range():
+    bs = bucket_boundaries(100, min_length=8, step=1.25)
+    assert bs[0] == 8 and bs[-1] == 100
+    assert all(b2 > b1 for b1, b2 in zip(bs, bs[1:]))
+
+
+def test_bucket_boundaries_small_max():
+    assert bucket_boundaries(4) == [4]
+    with pytest.raises(ValueError):
+        bucket_boundaries(0)
+    with pytest.raises(ValueError):
+        bucket_boundaries(16, step=1.0)
+
+
+def test_bucket_for_edges():
+    bs = [8, 16, 32]
+    assert bucket_for(0, bs) == 8
+    assert bucket_for(8, bs) == 8
+    assert bucket_for(9, bs) == 16
+    assert bucket_for(32, bs) == 32
+    with pytest.raises(ValueError):
+        bucket_for(33, bs)
+    with pytest.raises(ValueError):
+        bucket_for(-1, bs)
+
+
+def test_bucket_batch_sizes_token_budget():
+    sizes = bucket_batch_sizes([8, 16, 32], tokens_per_batch=64,
+                               max_batch=16)
+    assert sizes == {8: 8, 16: 4, 32: 2}
+    # budget smaller than a bucket still admits one request
+    assert bucket_batch_sizes([128], 64, 16) == {128: 1}
+
+
+def test_group_by_bucket():
+    groups = group_by_bucket([3, 9, 20, 8], [8, 16, 32])
+    assert groups == {8: [0, 3], 16: [1], 32: [2]}
+
+
+def test_percentile_interpolation():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile([], 99) == 0.0
+
+
+# --------------------------------------------------------------------
+# Incremental (append-row) decode cost path
+# --------------------------------------------------------------------
+
+def test_incremental_step_cost_flat_in_kv_len(chip):
+    """Marginal decode-step cost must not scale with KV length."""
+    steps = {}
+    for kv in (32, 128):
+        c1 = _decode_cycles(chip, kv, 1, incremental=True)
+        c8 = _decode_cycles(chip, kv, 8, incremental=True)
+        steps[kv] = (c8 - c1) / 7.0
+    # 4x the KV length may not even double the per-step cost (the
+    # residual growth is the attention MVM itself, which is O(kv));
+    # the O(kv) weight re-staging this bounds would give ~4x.
+    assert steps[128] < 2.0 * steps[32]
+
+
+def test_full_restage_scales_with_kv_len(chip):
+    """Control: without kv_append the per-step cost is O(kv_len)."""
+    steps = {}
+    for kv in (32, 128):
+        c1 = _decode_cycles(chip, kv, 1, incremental=False)
+        c8 = _decode_cycles(chip, kv, 8, incremental=False)
+        steps[kv] = (c8 - c1) / 7.0
+    assert steps[128] > 2.5 * steps[32]
+
+
+def test_incremental_beats_full_restage(chip):
+    for kv in (32, 128):
+        incr = _decode_cycles(chip, kv, 8, incremental=True)
+        full = _decode_cycles(chip, kv, 8, incremental=False)
+        assert incr < full
+
+
+def test_decode_trace_within_band_of_simulator(chip):
+    """Fidelity agreement on the decode step (tiny config)."""
+    tr = _decode_cycles(chip, 32, 4, True, fidelity="trace")
+    pf = _decode_cycles(chip, 32, 4, True, fidelity="simulate")
+    assert TRACE_BAND[0] <= tr / pf <= TRACE_BAND[1]
+
+
+# --------------------------------------------------------------------
+# Traces
+# --------------------------------------------------------------------
+
+def test_trace_generators_deterministic():
+    a = poisson_trace(100.0, 50, seed=7)
+    b = poisson_trace(100.0, 50, seed=7)
+    assert a == b
+    assert poisson_trace(100.0, 50, seed=8) != a
+    assert bursty_trace(100.0, 50, seed=7) == bursty_trace(
+        100.0, 50, seed=7)
+
+
+def test_trace_roundtrip(tmp_path):
+    a = poisson_trace(100.0, 20, seed=3)
+    path = str(tmp_path / "trace.json")
+    save_trace(path, a)
+    assert load_trace(path) == a
+
+
+def test_bursty_rejects_bad_duty():
+    with pytest.raises(ValueError):
+        bursty_trace(100.0, 10, duty=0.0)
+    with pytest.raises(ValueError):
+        bursty_trace(100.0, 10, burst=10.0, duty=0.5)
+
+
+# --------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------
+
+def _mk_trace(table, rate_x, n=80, seed=0):
+    """Trace whose offered token load is rate_x times decode capacity."""
+    cfg = table.cfg
+    cap = table.fit_batch / table.iteration_s(
+        [cfg.max_seq] * table.fit_batch)
+    avg_gen = (4 + cfg.max_new) / 2.0
+    rate = rate_x * cap / avg_gen
+    return poisson_trace(rate, n, seed=seed, max_prompt=cfg.max_prompt,
+                         max_new=cfg.max_new)
+
+
+def test_metrics_json_deterministic(table):
+    trace = _mk_trace(table, 0.8)
+    runs = []
+    for _ in range(2):
+        sim = ServeSim(table, make_policy("continuous", 8))
+        runs.append(metrics_json(sim.run(trace)))
+    assert runs[0] == runs[1]
+    payload = json.loads(runs[0])
+    for key in ("ttft_s", "tpot_s", "e2e_s"):
+        assert {"p50", "p95", "p99", "mean"} <= set(payload[key])
+    assert payload["requests"] == 80
+
+
+def test_all_tokens_accounted(table):
+    trace = _mk_trace(table, 0.5, n=40)
+    m = ServeSim(table, make_policy("continuous", 8)).run(trace)
+    assert m["tokens"] == sum(r.gen_len for r in trace)
+    assert m["throughput_tok_s"] > 0
+
+
+def test_continuous_beats_static_p99_at_equal_throughput(table):
+    """Near saturation, iteration-level batching wins tail latency."""
+    trace = _mk_trace(table, 1.2, n=120)
+    ms = ServeSim(table, make_policy("static", 8)).run(trace)
+    mc = ServeSim(table, make_policy("continuous", 8)).run(trace)
+    # same trace fully served -> comparable delivered throughput
+    assert mc["tokens"] == ms["tokens"]
+    assert mc["throughput_tok_s"] >= 0.95 * ms["throughput_tok_s"]
+    assert mc["tpot_s"]["p99"] < ms["tpot_s"]["p99"]
+    assert mc["e2e_s"]["p99"] <= ms["e2e_s"]["p99"]
+
+
+def test_kv_admission_respects_budget(table):
+    cfg = table.cfg
+    one = cfg.kv_bytes(cfg.max_seq)
+    # all-max-length requests each reserve exactly `one`, so a budget
+    # of two max-length requests caps decode concurrency at 2
+    trace = poisson_trace(
+        1e5, 40, seed=0,
+        min_prompt=cfg.max_prompt, max_prompt=cfg.max_prompt,
+        min_new=cfg.max_new, max_new=cfg.max_new)
+    sim = ServeSim(table, make_policy("continuous", 8),
+                   kv_capacity_bytes=2 * one)
+    m = sim.run(trace)
+    assert m["kv_peak_bytes"] <= 2 * one
+    assert m["peak_decode_batch"] <= 2
+
+
+def test_kv_budget_too_small_rejected(table):
+    one = table.cfg.kv_bytes(table.cfg.max_seq)
+    with pytest.raises(ValueError):
+        ServeSim(table, make_policy("continuous", 8),
+                 kv_capacity_bytes=one - 1)
+
+
+def test_single_token_requests_skip_decode(table):
+    trace = [r for r in _mk_trace(table, 0.5, n=10)]
+    trace = [type(r)(rid=r.rid, t_arrive=r.t_arrive,
+                     prompt_len=r.prompt_len, gen_len=1)
+             for r in trace]
+    m = ServeSim(table, make_policy("continuous", 8)).run(trace)
+    assert m["decode_iterations"] == 0
+    assert m["tokens"] == 10
