@@ -1,0 +1,173 @@
+"""Mesh-of-chips benchmark: committed multi-chip performance golden.
+
+Compiles the full-size ``transformer`` workload onto 1/2/4/8-chip
+meshes through :mod:`repro.system` at trace fidelity and records, per
+mesh size and parallelism mode, the end-to-end cycles, the inter-chip
+communication cycles, and the delivered throughput (samples/s and
+tok/s at the workload's sequence length).
+
+The single-chip row runs the classic (non-system) path — the full
+transformer's resident weights exceed one chip's gmem, so the system
+partitioner rightly refuses it at 1 chip; the mesh rows are exactly
+the capacity wall the scale-out layer exists to clear.
+
+Every number derives from deterministic cycle counts, so ``--smoke``
+fails on ANY drift vs the committed ``BENCH_system.json`` (regenerate
+with ``--update-golden`` and commit the diff when a cost-model change
+is intentional).
+
+    PYTHONPATH=src python -m benchmarks.bench_system [--smoke]
+        [--update-golden] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_PATH = os.path.join(_ROOT, "BENCH_system.json")
+
+MODEL = "transformer"
+SEQ = 128                    # transformer_lm default — tokens/sample
+FIDELITY = "trace"
+LINK = "pcb"
+MESHES = (1, 2, 4, 8)
+
+_GATED = ("cycles", "comm_cycles", "throughput_sps", "tok_s")
+
+
+def _round(x: float) -> float:
+    return round(float(x), 9)
+
+
+def bench_doc() -> Dict:
+    from repro import flow
+    from repro.core.arch import default_chip
+    from repro.flow import CompileOptions
+    from repro.system import SystemConfig
+
+    chip = default_chip()
+    meshes: Dict[str, Dict] = {}
+    for n in MESHES:
+        entry: Dict[str, Dict] = {}
+        modes = ("single",) if n == 1 else ("pipeline", "tensor")
+        for mode in modes:
+            system = None if mode == "single" else SystemConfig.mesh(
+                n, link=LINK, parallel=mode)
+            art = flow.compile(MODEL, chip, CompileOptions(
+                fidelity=FIDELITY, system=system))
+            rep = art.evaluate()
+            entry[mode] = {
+                "cycles": _round(rep.cycles),
+                "comm_cycles": _round(getattr(rep, "comm_cycles", 0)),
+                "throughput_sps": _round(rep.throughput_sps),
+                "tok_s": _round(rep.throughput_sps * SEQ),
+            }
+        meshes[str(n)] = entry
+    return {
+        "schema": 1,
+        "model": MODEL,
+        "seq": SEQ,
+        "fidelity": FIDELITY,
+        "link": LINK,
+        "chip": "default",
+        "meshes": meshes,
+    }
+
+
+def report(doc: Dict) -> str:
+    out = [f"== system bench ({doc['model']}, fidelity="
+           f"{doc['fidelity']}, link={doc['link']}) =="]
+    for n, entry in doc["meshes"].items():
+        for mode, m in entry.items():
+            out.append(
+                f"chips={n:>2} {mode:<8s} cycles={m['cycles']:>12.0f} "
+                f"comm={m['comm_cycles']:>11.0f} "
+                f"tok/s={m['tok_s']:>10.0f}")
+    return "\n".join(out)
+
+
+def smoke_drift(doc: Dict, golden: Dict) -> List[str]:
+    """Failures vs the committed golden (empty = clean)."""
+    drift: List[str] = []
+    for n in sorted(set(doc["meshes"]) | set(golden["meshes"]), key=int):
+        dm = doc["meshes"].get(n)
+        gm = golden["meshes"].get(n)
+        if dm is None or gm is None:
+            drift.append(f"mesh {n}: "
+                         f"{'missing' if dm is None else 'new'} "
+                         f"vs golden")
+            continue
+        for mode in sorted(set(dm) | set(gm)):
+            a, b = dm.get(mode), gm.get(mode)
+            if a is None or b is None:
+                drift.append(f"mesh {n}.{mode}: "
+                             f"{'missing' if a is None else 'new'}")
+                continue
+            for k in _GATED:
+                if _round(a[k]) != _round(b[k]):
+                    drift.append(f"mesh {n}.{mode}.{k}: "
+                                 f"{b[k]} -> {a[k]}")
+    # structural invariants, independent of the golden numbers
+    m = doc["meshes"]
+    if m["4"]["tensor"]["comm_cycles"] <= m["2"]["tensor"]["comm_cycles"]:
+        drift.append("tensor comm no longer grows with chip count")
+    if m["2"]["pipeline"]["throughput_sps"] <= \
+            m["1"]["single"]["throughput_sps"]:
+        drift.append("2-chip pipeline no longer beats one chip")
+    return drift
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed golden (CI job)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help=f"rewrite {GOLDEN_PATH}")
+    ap.add_argument("--json", default="results/bench_system.json",
+                    help="also write the measured doc here ('' to skip)")
+    args = ap.parse_args(argv)
+
+    doc = bench_doc()
+    print(report(doc))
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.update_golden:
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"golden updated: {GOLDEN_PATH}")
+        return 0
+    if args.smoke:
+        try:
+            with open(GOLDEN_PATH) as f:
+                golden = json.load(f)
+        except FileNotFoundError:
+            print(f"golden {GOLDEN_PATH} missing "
+                  f"(generate with --update-golden)")
+            return 1
+        drift = smoke_drift(doc, golden)
+        if drift:
+            print("SYSTEM BENCH DRIFT vs committed golden:")
+            for d in drift:
+                print(f"  {d}")
+            print("if the cost-model change is intentional, regenerate "
+                  "with `python -m benchmarks.bench_system "
+                  "--update-golden` and commit the diff")
+            return 1
+        g4 = golden["meshes"]["4"]
+        print("golden: clean (committed 4-chip pipeline "
+              f"tok/s={g4['pipeline']['tok_s']:.0f}, "
+              f"tensor tok/s={g4['tensor']['tok_s']:.0f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

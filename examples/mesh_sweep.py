@@ -1,0 +1,80 @@
+"""Mesh-of-chips scale-out sweep: pipeline vs tensor parallelism.
+
+Compiles one workload onto 1 / 2 / 4 / 8-chip meshes through
+``repro.system`` and prints, per mesh size and link tier, the
+end-to-end batch latency, the inter-chip communication share, and the
+throughput — the numbers behind the pipeline-vs-tensor crossover:
+
+* **pipeline** stages pay one activation handoff per cut, so their
+  comm cost is small and flat — but stage imbalance caps the speedup;
+* **tensor** shards pay a collective per layer, so their comm cost
+  grows with chip count — but the compute split is near-perfect.
+
+Which wins flips with the link tier: on an interposer-class link the
+collectives are cheap enough for tensor's better balance to pay off
+earlier; on PCB/cable tiers pipeline holds on longer.
+
+    PYTHONPATH=src python examples/mesh_sweep.py [model]
+        [--chips 1,2,4,8] [--links interposer,pcb] [--fidelity trace]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import flow
+from repro.core.arch import default_chip
+from repro.flow import CompileOptions
+from repro.system import PARALLEL_MODES, SystemConfig
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("model", nargs="?", default="transformer")
+    ap.add_argument("--chips", default="1,2,4,8",
+                    help="comma-separated mesh sizes")
+    ap.add_argument("--links", default="interposer,pcb",
+                    help="comma-separated link tiers")
+    ap.add_argument("--fidelity", default="trace",
+                    choices=("analytic", "trace"))
+    args = ap.parse_args()
+    chip = default_chip()
+    sizes = [int(s) for s in args.chips.split(",")]
+    links = args.links.split(",")
+
+    print(f"model={args.model}  chip={chip.name}  "
+          f"fidelity={args.fidelity}\n")
+    hdr = (f"{'chips':>5} {'link':>10} {'mode':>8} {'cycles':>12} "
+           f"{'comm':>10} {'comm%':>6} {'samples/s':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+    for n in sizes:
+        for link in links:
+            for mode in PARALLEL_MODES if n > 1 else ("pipeline",):
+                try:
+                    art = flow.compile(args.model, chip, CompileOptions(
+                        fidelity=args.fidelity,
+                        system=SystemConfig.mesh(n, link=link,
+                                                 parallel=mode)))
+                    rep = art.evaluate()
+                    comm = getattr(rep, "comm_cycles", 0)
+                    pct = 100.0 * comm / rep.cycles if rep.cycles else 0
+                    print(f"{n:>5} {link:>10} {mode:>8} "
+                          f"{rep.cycles:>12.0f} {comm:>10.0f} "
+                          f"{pct:>5.1f}% {rep.throughput_sps:>10.1f}")
+                except Exception as e:  # infeasible point, keep going
+                    print(f"{n:>5} {link:>10} {mode:>8} "
+                          f"{'—':>12} {type(e).__name__}: "
+                          f"{str(e)[:50]}")
+            if n == 1:
+                break       # link tier is irrelevant on one chip
+    print("\npipeline pays one handoff per cut (flat comm); tensor "
+          "pays a collective\nper layer (comm grows with chips) but "
+          "splits compute near-perfectly —\nthe crossover moves with "
+          "the link tier.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -537,6 +537,34 @@ def _main_and_skip_preds(cg: CondensedGraph, g: Group,
     return main, side
 
 
+def _side_input_ops(cg: CondensedGraph, g: Group) -> List[int]:
+    """Graph-input op ids feeding this group's side (residual/scale)
+    operands.  Impossible in a freshly condensed model graph (inputs
+    are always main operands there), but a system-level pipeline cut
+    can turn a residual producer on another chip into a slice input —
+    the skip path then loads from the gmem input region instead of a
+    producer group's activations."""
+    if cg.source is None:
+        return []
+    main_in = _main_input_op(cg, g)
+    wop: Optional[int] = None
+    if g.dynamic_weights and g.anchor is not None:
+        ins = cg.source.ops[g.anchor].inputs
+        wop = ins[1] if len(ins) > 1 else None
+    member = set(g.op_ids)
+    out: List[int] = []
+    for i in g.op_ids:
+        for s in cg.source.ops[i].inputs:
+            if s in member or cg.source.ops[s].kind != "input":
+                continue
+            if s == wop or s in out:
+                continue
+            if s == main_in and (g.anchor is None or i == g.anchor):
+                continue
+            out.append(s)
+    return out
+
+
 def _main_input_op(cg: CondensedGraph, g: Group) -> Optional[int]:
     """Graph-input op id the group's main operand reads (or None)."""
     if cg.source is None:
@@ -574,8 +602,16 @@ def compile_model(result: PartitionResult, batch: Optional[int] = None,
 def _compile_model(result: PartitionResult, batch: Optional[int] = None,
                    quant: Optional[Dict[int, QuantParams]] = None,
                    isa: Optional[Isa] = None,
-                   strict_lmem: bool = False) -> CompiledModel:
-    """Internal codegen body (the :mod:`repro.flow` codegen pass)."""
+                   strict_lmem: bool = False,
+                   force_boundary: Optional[Set[int]] = None
+                   ) -> CompiledModel:
+    """Internal codegen body (the :mod:`repro.flow` codegen pass).
+
+    ``force_boundary`` names group ids whose outputs must be written to
+    their gmem activation buffer even when every consumer shares the
+    stage — the multi-chip system path reads cut-crossing activations
+    out of gmem to feed the next chip.
+    """
     cg = result.cg
     chip = result.chip
     isa = isa or default_isa()
@@ -604,7 +640,8 @@ def _compile_model(result: PartitionResult, batch: Optional[int] = None,
     for sp in result.stages:
         schedules = plan_stage(cg, sp, chip)
         stages.append(_compile_stage(cg, sp, schedules, chip, isa, layout,
-                                     qp, batch, op_owner, strict_lmem))
+                                     qp, batch, op_owner, strict_lmem,
+                                     force_boundary or set()))
     return CompiledModel(cg=cg, chip=chip, result=result, stages=stages,
                          layout=layout, batch=batch, isa=isa, quant=qp)
 
@@ -625,7 +662,10 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
                    schedules: List[OpSchedule], chip: ChipConfig, isa: Isa,
                    layout: GmemLayout, qp: Dict[int, QuantParams],
                    batch: int, op_owner: Dict[int, int],
-                   strict_lmem: bool) -> StageProgram:
+                   strict_lmem: bool,
+                   force_boundary: Optional[Set[int]] = None
+                   ) -> StageProgram:
+    force_boundary = force_boundary or set()
     by_gid = {s.gid: s for s in schedules}
     member = set(sp.gids)
 
@@ -655,7 +695,8 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
         g = cg[sched.gid]
         consumers = [h for h in cg if g.idx in h.preds]
         boundary_out = (not consumers) or any(h.idx not in member
-                                              for h in consumers)
+                                              for h in consumers) \
+            or g.idx in force_boundary
         if boundary_out:
             _, _, total = _out_geometry(cg, sched)
             for s in range(batch):
@@ -679,7 +720,7 @@ def _compile_stage(cg: CondensedGraph, sp: StagePlan,
 
     ctx = _Ctx(cg=cg, sp=sp, chip=chip, layout=layout, bufs=bufs, qp=qp,
                member=member, by_gid=by_gid, op_owner=op_owner, em=em,
-               batch=batch)
+               batch=batch, force_boundary=force_boundary)
 
     # 1. weight prologue (round 0; later rounds stream inside the loop).
     # Dynamic groups have no prologue — their weights are per-sample
@@ -769,6 +810,7 @@ class _Ctx:
     op_owner: Dict[int, int]
     em: object
     batch: int
+    force_boundary: Set[int] = field(default_factory=set)
 
 
 def _plan_buffers(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
@@ -835,7 +877,7 @@ def _plan_buffers(cg: CondensedGraph, sched: OpSchedule, rep: ReplicaPlan,
                 3, max(p1 - p0, 1) * sched.pool.wo * sched.n_total,
                 f"{tag} pooled")
     _, side = _main_and_skip_preds(cg, g, op_owner)
-    if side:
+    if side or _side_input_ops(cg, g):
         k0, k1, krow_nb = _side_rows(cg, sched, rep)
         out["skip"] = lmems[asm].alloc(
             0, max(max(k1 - k0, 1) * krow_nb, (o1 - o0) * row_nb),
@@ -1077,6 +1119,15 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
                 ctx.em(rep.cores[0]).gld(b["skip"], base + k0 * krow_nb,
                                          (k1 - k0) * krow_nb)
         bcast_side = bcast_side or bcast
+    side_inputs = _side_input_ops(cg, g)
+    if k1 > k0:
+        # residual operand arriving as a graph input (a system-level
+        # pipeline cut upstream): load it from the gmem input region
+        for sop in side_inputs:
+            base, _ = ctx.layout.inputs[s]
+            base += ctx.layout.input_offsets.get(sop, 0)
+            ctx.em(rep.cores[0]).gld(b["skip"], base + k0 * krow_nb,
+                                     (k1 - k0) * krow_nb)
 
     # ---- 1c. acquire dynamic weights (a predecessor's activations) ----------
     dynamic = sched.weight_source == "dynamic"
@@ -1162,7 +1213,7 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
 
     # ---- 4. fused tail (graph order) ------------------------------------------
     has_side_op = "add" in sched.vector_ops or "mul" in sched.vector_ops
-    self_skip = has_side_op and not side
+    self_skip = has_side_op and not side and not side_inputs
     side_pre = _side_pre_reduce(sched)
 
     def apply_side(buf_addr: int, lo: int, hi: int, row_nb: int) -> None:
@@ -1227,7 +1278,8 @@ def _emit_sample(ctx: _Ctx, sched: OpSchedule, rep: ReplicaPlan,
     # ---- 5. deliver -------------------------------------------------------------
     consumers = [h for h in cg if g.idx in h.preds]
     boundary_out = (not consumers) or any(h.idx not in ctx.member
-                                          for h in consumers)
+                                          for h in consumers) \
+        or g.idx in ctx.force_boundary
     my_rows, my_row_nb, _ = _out_geometry(cg, sched)
     for h in consumers:
         if h.idx not in ctx.member:

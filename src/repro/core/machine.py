@@ -43,6 +43,7 @@ from .energy import DEFAULT_TABLE, EnergyTable, energy_breakdown
 __all__ = [
     "Calibration", "IDENTITY_CALIBRATION", "MachineModel", "machine_for",
     "VECTOR_SPECIAL_FNS", "VECTOR_MUL_FNS",
+    "InterChipLink", "LINK_TIERS", "link_tier",
 ]
 
 
@@ -119,6 +120,78 @@ class Calibration:
 
 
 IDENTITY_CALIBRATION = Calibration()
+
+
+# ---------------------------------------------------------------------------
+# Inter-chip interconnect (mesh-of-chips tier above the NoC)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InterChipLink:
+    """One inter-chip link technology tier.
+
+    Chips of a :class:`repro.system.SystemConfig` mesh talk over these
+    links; a transfer drains through the sending chip's reserved global
+    memory ports, so the effective bandwidth is the min of the serdes
+    payload rate and the boundary-port stream rate — exactly the
+    "gmem-port-contended" pricing the system partitioner assumes.
+    """
+
+    name: str = "pcb"
+    bytes_per_cycle: float = 16.0     # serdes payload per core clock
+    hop_cycles: int = 500             # per-chip-hop latency (serdes+fifo)
+    sync_cycles: int = 200            # fixed handshake per transfer
+    energy_pj_per_byte: float = 10.0  # link traversal energy
+
+    def __post_init__(self) -> None:
+        if not (self.bytes_per_cycle > 0
+                and math.isfinite(self.bytes_per_cycle)):
+            raise ValueError(f"link bytes_per_cycle must be positive, "
+                             f"got {self.bytes_per_cycle!r}")
+        if self.hop_cycles < 0 or self.sync_cycles < 0:
+            raise ValueError("link latencies must be non-negative")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name,
+                "bytes_per_cycle": self.bytes_per_cycle,
+                "hop_cycles": self.hop_cycles,
+                "sync_cycles": self.sync_cycles,
+                "energy_pj_per_byte": self.energy_pj_per_byte}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "InterChipLink":
+        return cls(name=str(d["name"]),
+                   bytes_per_cycle=float(d["bytes_per_cycle"]),
+                   hop_cycles=int(d["hop_cycles"]),
+                   sync_cycles=int(d["sync_cycles"]),
+                   energy_pj_per_byte=float(d["energy_pj_per_byte"]))
+
+
+# Named technology tiers, best to worst: silicon interposer (chiplets on
+# one substrate), PCB traces (chips on one board), cabled boards (a pod).
+# These are THE inter-chip timing/energy constants — nothing outside
+# this module may invent its own.
+LINK_TIERS: Dict[str, InterChipLink] = {
+    "interposer": InterChipLink("interposer", bytes_per_cycle=64.0,
+                                hop_cycles=100, sync_cycles=50,
+                                energy_pj_per_byte=1.0),
+    "pcb": InterChipLink("pcb", bytes_per_cycle=16.0,
+                         hop_cycles=500, sync_cycles=200,
+                         energy_pj_per_byte=10.0),
+    "cable": InterChipLink("cable", bytes_per_cycle=4.0,
+                           hop_cycles=2000, sync_cycles=500,
+                           energy_pj_per_byte=30.0),
+}
+
+
+def link_tier(name: str) -> InterChipLink:
+    """Resolve a named inter-chip link tier."""
+    try:
+        return LINK_TIERS[name]
+    except KeyError:
+        raise KeyError(f"unknown inter-chip link tier {name!r} "
+                       f"(have: {', '.join(sorted(LINK_TIERS))})") from None
 
 
 @dataclass(frozen=True)
@@ -313,6 +386,59 @@ class MachineModel:
         n = self.gmem_ports if ports is None else max(1, min(
             ports, self.gmem_ports))
         return nbytes / (n * self.gmem_port_bytes_per_cycle)
+
+    # ------------------------------------------------------------------
+    # Inter-chip links (system tier above the NoC)
+    # ------------------------------------------------------------------
+
+    def interchip_bandwidth(self, link: InterChipLink,
+                            ports: int = 1) -> float:
+        """Effective B/cyc of one link transfer: the serdes payload
+        rate, throttled by the sending chip's reserved boundary gmem
+        ports (activations drain gmem -> serdes)."""
+        n = max(1, min(int(ports), self.gmem_ports))
+        return min(link.bytes_per_cycle,
+                   float(n * self.gmem_port_bytes_per_cycle))
+
+    def interchip_transfer_cycles(self, nbytes: float,
+                                  link: InterChipLink,
+                                  hops: int = 1,
+                                  ports: int = 1) -> float:
+        """End-to-end inter-chip transfer: handshake + per-chip-hop
+        latency + port-contended streaming.  Scaled by the ``noc``
+        calibration factor (the communication hierarchy shares one
+        correction)."""
+        if nbytes <= 0:
+            return 0.0
+        cyc = (link.sync_cycles + max(1, int(hops)) * link.hop_cycles
+               + nbytes / self.interchip_bandwidth(link, ports))
+        return cyc * self.calib.noc
+
+    def interchip_collective_cycles(self, nbytes: float,
+                                    link: InterChipLink,
+                                    n_chips: int,
+                                    kind: str = "allgather",
+                                    ports: int = 1) -> float:
+        """Ring collective over ``n_chips`` on ``nbytes`` of payload
+        (the full un-sharded tensor).  ``allgather``/``reduce`` both
+        move ``(C-1)/C`` of the payload through each chip's link in
+        ``C-1`` latency-bearing steps; ``allreduce`` is reduce-scatter
+        + all-gather (twice the traffic)."""
+        c = int(n_chips)
+        if c <= 1 or nbytes <= 0:
+            return 0.0
+        if kind not in ("allgather", "reduce", "allreduce"):
+            raise ValueError(f"unknown collective kind {kind!r}")
+        steps = (c - 1) * (2 if kind == "allreduce" else 1)
+        bw = self.interchip_bandwidth(link, ports)
+        cyc = (steps * (link.sync_cycles + link.hop_cycles)
+               + steps * (nbytes / c) / bw)
+        return cyc * self.calib.noc
+
+    def interchip_energy_nj(self, nbytes: float,
+                            link: InterChipLink) -> float:
+        """Link-traversal energy of ``nbytes`` on one tier, in nJ."""
+        return nbytes * link.energy_pj_per_byte * 1e-3
 
     # ------------------------------------------------------------------
     # Energy event pricing

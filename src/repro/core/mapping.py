@@ -44,7 +44,25 @@ from .machine import Calibration, MachineModel, machine_for
 __all__ = [
     "CostParams", "GroupAlloc", "StagePlan", "mg_tiles", "min_cores",
     "optimal_mapping", "generic_mapping", "opportunistic_mapping",
+    "gmem_footprint_bytes",
 ]
+
+
+def gmem_footprint_bytes(groups: "Iterable") -> int:
+    """Resident global-memory footprint of a set of groups, per chip.
+
+    Static and streamed weights live in gmem for the whole run (streamed
+    groups re-fetch from there every round) — they are the *resident*
+    term and the capacity wall.  Dynamic weights are activations and
+    never materialize; boundary activations stream through gmem
+    transiently (stage-sequential execution frees a blob once the
+    consumer stage drains it) and are excluded.  The system-level
+    partitioner uses this as the per-chip capacity rule — one chip's
+    16 MB gmem is the wall that forces multi-chip plans.  The legacy
+    single-chip path stays unguarded for backwards compatibility.
+    """
+    return sum(g.weight_bytes for g in groups
+               if g.weight_source != "dynamic")
 
 
 @dataclass(frozen=True)

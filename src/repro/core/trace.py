@@ -74,6 +74,34 @@ class TraceReport:
         return (f"{self.cycles:.0f} cycles (trace, {self.n_events} "
                 f"events), {e['total'] / 1e6:.3f} mJ")
 
+    @classmethod
+    def stitch(cls, reports: "List[TraceReport]",
+               link_cycles: float = 0.0) -> "TraceReport":
+        """Concatenate per-chip trace replays into one system-level
+        report: chips of a pipeline-parallel plan run their stage lists
+        back to back, joined by inter-chip link transfers whose total
+        occupancy is ``link_cycles`` (priced by the caller against
+        :class:`~repro.core.machine.InterChipLink` — link energy is
+        accounted there too, not in this event ledger)."""
+        if not reports:
+            raise ValueError("stitch needs at least one TraceReport")
+        events: Dict[str, float] = {}
+        busy: Dict[str, float] = {}
+        stage_cycles: List[float] = []
+        for r in reports:
+            stage_cycles.extend(r.stage_cycles)
+            for k, v in r.events.items():
+                events[k] = events.get(k, 0.0) + v
+            for k, v in r.unit_busy.items():
+                busy[k] = busy.get(k, 0.0) + v
+        if link_cycles > 0:
+            busy["interchip"] = busy.get("interchip", 0.0) + link_cycles
+        return cls(cycles=sum(r.cycles for r in reports) + link_cycles,
+                   stage_cycles=stage_cycles, events=events,
+                   unit_busy=busy,
+                   n_events=sum(r.n_events for r in reports),
+                   table=reports[0].table)
+
 
 # ---------------------------------------------------------------------------
 # Per-(group, replica) replay profile

@@ -299,6 +299,20 @@ def tiny_cnn(res: int = 8, c: int = 8, n_classes: int = 10) -> Graph:
     return g
 
 
+def deepseek_proxy(n_layers: int = 8, d_model: int = 768, n_heads: int = 12,
+                   d_ff: int = 2048, seq: int = 32,
+                   vocab: int = 1024) -> Graph:
+    """Scale-out proxy LM: a decoder stack whose resident int8 weights
+    (~45 MB at the defaults) exceed one chip's weight-resident gmem
+    capacity (~16.8 MB), so it compiles only through the
+    :mod:`repro.system` multi-chip partitioner — the in-tree witness
+    that the mesh genuinely extends reach rather than just latency."""
+    g = transformer_lm(n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+                       d_ff=d_ff, seq=seq, vocab=vocab)
+    g.name = f"deepseek_proxy_{n_layers}L_{d_model}d"
+    return g
+
+
 WORKLOADS = {
     "resnet18": resnet18,
     "vgg19": vgg19,
@@ -307,6 +321,7 @@ WORKLOADS = {
     "transformer": transformer_lm,
     "transformer_decode": transformer_decode,
     "tiny_cnn": tiny_cnn,
+    "deepseek_proxy": deepseek_proxy,
 }
 
 

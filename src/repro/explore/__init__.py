@@ -31,7 +31,7 @@ from .search import (SearchResult, by_cycles, by_edp, by_energy,
                      grid_search, hill_climb, random_search,
                      successive_halving)
 from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
-                    Dimension, default_space, mg_flit_space)
+                    Dimension, default_space, mesh_space, mg_flit_space)
 
 __all__ = [
     "cache", "cli", "engine", "pareto", "records", "search", "space",
@@ -43,5 +43,5 @@ __all__ = [
     "SearchResult", "by_cycles", "by_edp", "by_energy", "grid_search",
     "hill_climb", "random_search", "successive_halving",
     "DesignPoint", "DesignSpace", "Dimension", "default_space",
-    "mg_flit_space", "SWEEP_MG", "SWEEP_FLIT",
+    "mesh_space", "mg_flit_space", "SWEEP_MG", "SWEEP_FLIT",
 ]

@@ -57,15 +57,17 @@ _CHEAP = ("analytic", "trace")
 def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
                   params: Optional[CostParams] = None,
                   fidelity: str = "analytic",
-                  calibration: Optional[Calibration] = None
-                  ) -> Dict[str, Any]:
+                  calibration: Optional[Calibration] = None,
+                  system: Optional[Any] = None) -> Dict[str, Any]:
     """Score one (graph, chip, strategy) at the given fidelity.
 
     Runs on the :mod:`repro.flow` pass pipeline, so a point promoted
     from the analytic screen to the simulator in the same process
-    reuses its cached partition instead of re-partitioning.  Returns
-    ``{"cycles", "energy", "throughput_sps"}`` — the payload the cache
-    stores and :class:`EvalRecord` wraps.
+    reuses its cached partition instead of re-partitioning.  With a
+    ``system`` (:class:`repro.system.SystemConfig`), the chip is
+    replicated over the mesh and the score covers the whole multi-chip
+    plan.  Returns ``{"cycles", "energy", "throughput_sps"}`` — the
+    payload the cache stores and :class:`EvalRecord` wraps.
     """
     if fidelity not in FIDELITIES:
         raise ValueError(f"fidelity must be one of {FIDELITIES}, "
@@ -74,7 +76,8 @@ def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
     art = flow.compile(cg, chip,
                        CompileOptions(strategy=strategy, params=params,
                                       fidelity=fidelity,
-                                      calibration=calibration))
+                                      calibration=calibration,
+                                      system=system))
     rep = art.evaluate()
     return {"cycles": rep.cycles, "energy": dict(rep.energy),
             "throughput_sps": rep.throughput_sps}
@@ -112,7 +115,8 @@ def _eval_worker(job: Tuple[DesignPoint, str]) -> Dict[str, Any]:
     try:
         out = evaluate_chip(_WORKER["cg"], point.chip(), point.strategy,
                             _WORKER["params"], fidelity,
-                            _WORKER.get("calibration"))
+                            _WORKER.get("calibration"),
+                            system=point.system())
     except Exception as e:        # noqa: BLE001 — point-local failure
         out = _err_payload(e)
     out["wall_s"] = time.perf_counter() - t0
@@ -129,10 +133,15 @@ def _eval_batch_worker(jobs: List[Tuple[DesignPoint, str]]
     params = _WORKER["params"]
     calibration = _WORKER.get("calibration")
     results: List[Optional[Dict[str, Any]]] = [None] * len(jobs)
-    groups: Dict[Tuple[str, str], List[int]] = defaultdict(list)
+    groups: Dict[Tuple[str, str, Any], List[int]] = defaultdict(list)
     for i, (pt, fid) in enumerate(jobs):
-        groups[(pt.strategy, fid)].append(i)
-    for (strategy, fidelity), idxs in groups.items():
+        # SystemConfig is a frozen dataclass, so it groups/hashes fine;
+        # single-chip points all land in the system=None group
+        try:
+            groups[(pt.strategy, fid, pt.system())].append(i)
+        except Exception as e:           # noqa: BLE001 — bad mesh/link
+            results[i] = _err_payload(e)
+    for (strategy, fidelity, system), idxs in groups.items():
         chips: List[ChipConfig] = []
         ok: List[int] = []
         for i in idxs:
@@ -149,7 +158,8 @@ def _eval_batch_worker(jobs: List[Tuple[DesignPoint, str]]
                 cg, chips,
                 CompileOptions(strategy=strategy, params=params,
                                fidelity=fidelity,
-                               calibration=calibration))
+                               calibration=calibration,
+                               system=system))
         except Exception:                # noqa: BLE001
             # e.g. one chip infeasible mid-batch: isolate per point
             for i in ok:
@@ -264,6 +274,11 @@ class ExplorationEngine:
         extra: Dict[str, Any] = {"workload_kw": self.workload_kw}
         if self.calibration is not None and fidelity in _CHEAP:
             extra["calibration"] = self.calibration.to_dict()
+        system = point.system()
+        if system is not None:
+            # only multi-chip points carry the kwarg, so every
+            # pre-scale-out cache entry keeps its key
+            extra["system"] = system.to_dict()
         return cache_key(self.model, point.chip(), point.strategy,
                          fidelity, self.params, **extra)
 
@@ -327,7 +342,8 @@ class ExplorationEngine:
         for i, pt in enumerate(points):
             try:
                 pt.chip()
-            except ArchError as e:
+                pt.system()
+            except (ArchError, ValueError) as e:
                 results[i] = {"cycles": float("inf"),
                               "energy": {"total": float("inf")},
                               "throughput_sps": 0.0, "wall_s": 0.0,

@@ -27,7 +27,7 @@ from ..core.partition import STRATEGIES
 
 __all__ = [
     "DesignPoint", "Dimension", "DesignSpace", "default_space",
-    "mg_flit_space", "SWEEP_MG", "SWEEP_FLIT",
+    "mg_flit_space", "mesh_space", "SWEEP_MG", "SWEEP_FLIT",
 ]
 
 # The paper's Fig. 6 / Fig. 7 grid — the single source of truth shared
@@ -58,6 +58,11 @@ class DesignPoint:
     flit_bytes: int = 8
     local_mem_kb: int = 512
     strategy: str = "generic"
+    # multi-chip scale-out axes (repro.system); chips=1 keeps the
+    # classic single-chip path (and its historical cache keys)
+    chips: int = 1
+    link: str = "pcb"
+    parallel: str = "pipeline"
 
     def chip(self) -> ChipConfig:
         return default_chip(
@@ -72,10 +77,19 @@ class DesignPoint:
                   f"-l{self.local_mem_kb}"),
         )
 
+    def system(self) -> Optional[Any]:
+        """``SystemConfig`` mesh for multi-chip points, else ``None``."""
+        if self.chips <= 1:
+            return None
+        from ..system import SystemConfig
+        return SystemConfig.mesh(self.chips, link=self.link,
+                                 parallel=self.parallel)
+
     @property
     def total_macros(self) -> int:
-        """Chip-level macro count — the silicon-cost axis for Pareto."""
-        return self.n_cores * self.n_macro_groups * self.macros_per_group
+        """Silicon-cost axis for Pareto — macro count across all chips."""
+        return (self.n_cores * self.n_macro_groups * self.macros_per_group
+                * max(1, self.chips))
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -133,7 +147,8 @@ class DesignSpace:
     def is_valid(self, pt: DesignPoint) -> bool:
         try:
             pt.chip()
-        except ArchError:
+            pt.system()
+        except (ArchError, ValueError):
             return False
         return all(c(pt) for c in self.constraints)
 
@@ -242,6 +257,22 @@ def mg_flit_space(mgs: Sequence[int] = SWEEP_MG,
         Dimension("macros_per_group", tuple(mgs)),
         Dimension("flit_bytes", tuple(flits)),
         Dimension("strategy", tuple(strategies)),
+    ])
+
+
+def mesh_space(chips: Sequence[int] = (1, 2, 4),
+               links: Sequence[str] = ("interposer", "pcb"),
+               parallel: Sequence[str] = ("pipeline",)) -> DesignSpace:
+    """Scale-out grid: chip count x inter-chip link tier (x parallelism).
+
+    Single-chip points ignore the ``link``/``parallel`` axes; the grid
+    still enumerates every combination, so pair this with a constraint
+    (or dedup on ``pt.system()``) when exact point counts matter.
+    """
+    return DesignSpace([
+        Dimension("chips", tuple(chips)),
+        Dimension("link", tuple(links)),
+        Dimension("parallel", tuple(parallel)),
     ])
 
 

@@ -55,11 +55,23 @@ class CompileOptions:
     # written by flow.calibrate(..., save=name)) and is resolved to the
     # Calibration it holds at construction time.
     calibration: Union[Calibration, str, None] = None
+    # Multi-chip scale-out: a repro.system.SystemConfig routes the
+    # compile through the system-level partitioner (``system:pipeline``
+    # / ``system:tensor`` passes) and makes ``flow.compile`` return a
+    # SystemArtifact stitching per-chip artifacts over inter-chip
+    # links.  ``None`` (default) is the classic single-chip path.
+    system: Optional[Any] = None
 
     def __post_init__(self) -> None:
         if self.fidelity not in FIDELITIES:
             raise ValueError(f"fidelity must be one of {FIDELITIES}, "
                              f"got {self.fidelity!r}")
+        if self.system is not None and (
+                not hasattr(self.system, "to_dict")
+                or not hasattr(self.system, "n_chips")):
+            raise TypeError(
+                f"system must be a repro.system.SystemConfig, got "
+                f"{type(self.system).__name__}")
         if isinstance(self.calibration, str):
             from .calibrate import load_calibration    # late: cycle
             object.__setattr__(self, "calibration",
@@ -113,6 +125,8 @@ class CompileOptions:
                      for gid, qp in (v or ())]
             elif f == "workload_kw":
                 v = [list(kv) for kv in (v or ())]
+            elif f == "system":
+                v = v.to_dict() if v is not None else None
             desc[f] = v
         return json.dumps(desc, sort_keys=True, separators=(",", ":"))
 

@@ -55,19 +55,27 @@ def workload_fingerprint(workload: Any) -> str:
     """
     if isinstance(workload, str):
         return f"name:{workload}"
-    src = workload.source if isinstance(workload, CondensedGraph) \
-        else workload
-    if isinstance(src, Graph):
-        desc = [(op.idx, op.name, op.kind, tuple(op.inputs),
+
+    def op_desc(g: Graph) -> list:
+        return [(op.idx, op.name, op.kind, tuple(op.inputs),
                  tuple(op.out_shape), sorted(op.attrs.items()),
                  op.gemm_m, op.gemm_k, op.gemm_n, op.groups)
-                for op in src.ops]
+                for op in g.ops]
+
+    if isinstance(workload, Graph):
+        desc: Any = op_desc(workload)
         kind = "graph"
-    elif isinstance(workload, CondensedGraph):    # condensed, no source
-        desc = [(g.idx, g.name, tuple(g.preds), g.gemm_m, g.gemm_k,
-                 g.gemm_n, g.groups, g.weight_bytes, g.in_bytes,
-                 g.out_bytes, sorted(g.vector_work.items()))
-                for g in workload]
+    elif isinstance(workload, CondensedGraph):
+        # group geometry always enters the digest: two condensed graphs
+        # over the same source but with different group records (e.g.
+        # tensor-parallel shards) must not share cache entries
+        desc = (op_desc(workload.source)
+                if workload.source is not None else None,
+                [(g.idx, g.name, tuple(g.preds), g.gemm_m, g.gemm_k,
+                  g.gemm_n, g.groups, g.macs, g.weight_bytes,
+                  g.in_bytes, g.out_bytes,
+                  sorted(g.vector_work.items()))
+                 for g in workload])
         kind = "cg"
     else:
         raise TypeError(f"workload must be a name, Graph or "
@@ -311,6 +319,10 @@ class Pipeline:
         elif kw:
             options = options.replace(**kw)
 
+        if options.system is not None:
+            return [self._compile_system(workload, chip, options)
+                    for chip in chips]
+
         try:
             part_pass = get_pass(partition_pass_name(options.strategy))
         except KeyError:
@@ -350,6 +362,54 @@ class Pipeline:
                 art.ensure_model()
             arts.append(art)
         return arts
+
+
+    # -- multi-chip (repro.system) --------------------------------------------
+
+    def _compile_system(self, workload: Any, chip: ChipConfig,
+                        options: CompileOptions) -> Any:
+        """The ``options.system`` path: condense once, run the
+        ``system:<mode>`` partition pass, then compile each chip slice
+        through the ordinary single-chip pipeline (``system=None``) —
+        a 1x1 mesh therefore produces an inner artifact bit-identical
+        to the classic path.  Returns a
+        :class:`repro.system.SystemArtifact`.
+        """
+        # imported lazily: repro.system imports repro.flow at module
+        # level, so flow -> system must stay function-local
+        from ..system import SystemArtifact
+        from ..system.passes import system_pass_name
+
+        sysc = options.system
+        if sysc.parallel == "tensor" and sysc.n_chips > 1 \
+                and options.fidelity in ("simulate", "func"):
+            raise ValueError(
+                "tensor-parallel plans support analytic/trace fidelity "
+                "only (shards are group-level scaled condensed graphs "
+                "with no per-shard ISA streams); use "
+                "parallel='pipeline' for simulator fidelities")
+
+        base = hashlib.sha256(
+            workload_fingerprint(workload).encode()).hexdigest()
+        ctx0 = PipelineContext(workload=workload, chip=chip,
+                               options=options)
+        _, cond_rec, cond_key = self._run_pass(get_pass("condense"),
+                                               ctx0, base)
+        ctx = PipelineContext(workload=workload, chip=chip,
+                              options=options, cg=ctx0.cg)
+        key = hashlib.sha256(
+            f"{cond_key}|chip:{_chip_fingerprint(chip)}"
+            .encode()).hexdigest()
+        plan, rec, key = self._run_pass(
+            get_pass(system_pass_name(sysc.parallel)), ctx, key)
+
+        inner = options.replace(system=None)
+        arts = [self.compile(sl.workload if sl.workload is not None
+                             else workload, chip, inner)
+                for sl in plan.slices]
+        return SystemArtifact(workload=workload, chip=chip,
+                              options=options, cg=ctx.cg, plan=plan,
+                              chips=arts, trace=[cond_rec, rec])
 
 
 _DEFAULT_PIPELINE: Optional[Pipeline] = None

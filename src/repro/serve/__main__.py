@@ -15,6 +15,7 @@ import argparse
 import sys
 from typing import Any, Dict, List
 
+from ..core.machine import LINK_TIERS
 from .metrics import metrics_json
 from .policy import POLICIES, make_policy
 from .trace_replay import (Request, ServeSim, bursty_trace, load_trace,
@@ -52,8 +53,37 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-new", type=int, default=64)
     p.add_argument("--no-incremental", action="store_true",
                    help="price decode with full KV re-staging")
+    p.add_argument("--chips", default="1",
+                   help="chip mesh, e.g. '2x2', '1x4' or a count "
+                        "('4' picks the squarest mesh); '1' = classic "
+                        "single-chip serving")
+    p.add_argument("--link", default="pcb",
+                   choices=tuple(sorted(LINK_TIERS)),
+                   help="inter-chip link tier for --chips > 1")
+    p.add_argument("--flow-cache",
+                   help="flow pass/table disk cache directory "
+                        "(also honors $REPRO_FLOW_CACHE); a second "
+                        "run with the same knobs skips compilation")
+    p.add_argument("--calibration",
+                   help="saved calibration preset name (see "
+                        "flow.calibrate(..., save=...))")
     p.add_argument("--json", help="write metrics JSON here")
     return p
+
+
+def _system(args: argparse.Namespace):
+    """``--chips``/``--link`` -> SystemConfig (None for one chip)."""
+    from ..system import SystemConfig
+    t = str(args.chips).lower().replace("×", "x")
+    try:
+        if "x" in t:
+            cx, cy = (int(v) for v in t.split("x", 1))
+            sysc = SystemConfig(chips_x=cx, chips_y=cy, link=args.link)
+        else:
+            sysc = SystemConfig.mesh(int(t), link=args.link)
+    except ValueError as e:
+        raise SystemExit(f"bad --chips {args.chips!r}: {e}") from None
+    return sysc if sysc.n_chips > 1 else None
 
 
 def _trace(args: argparse.Namespace) -> List[Request]:
@@ -84,10 +114,19 @@ def main(argv: List[str] | None = None) -> int:
         n_layers=args.n_layers, d_model=args.d_model,
         n_heads=args.n_heads, vocab=args.vocab,
         max_prompt=args.max_prompt, max_new=args.max_new)
-    print(f"compiling step costs (fidelity={args.fidelity}) ...",
+    system = _system(args)
+    mesh = (f", mesh {system.chips_x}x{system.chips_y} "
+            f"'{system.link.name}'" if system is not None else "")
+    print(f"compiling step costs (fidelity={args.fidelity}{mesh}) ...",
           flush=True)
     table = StepCostTable(cfg, fidelity=args.fidelity,
-                          incremental=not args.no_incremental)
+                          incremental=not args.no_incremental,
+                          system=system,
+                          calibration=args.calibration,
+                          flow_cache=args.flow_cache)
+    if table.cache_hit:
+        print("step-cost table loaded from flow cache "
+              "(compilation skipped)")
     requests = _trace(args)
     policies = sorted(POLICIES) if args.policy == "both" \
         else [args.policy]

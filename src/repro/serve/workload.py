@@ -16,17 +16,34 @@ bucket* on the chosen fidelity rung, and memoises the results:
 Because the decode workload uses the append-row (``kv_append``)
 weight path, ``per_seq`` stays O(1) in the KV length — the property
 the regression test in ``tests/test_serve.py`` pins.
+
+Tables are **disk-cacheable**: with a flow pass cache attached
+(``flow_cache=`` or the ``REPRO_FLOW_CACHE`` environment variable),
+the finished bucket tables are stored under a digest of everything
+that shaped them — chip, mesh, fidelity, bucket grid, calibration —
+so a second ``python -m repro.serve`` run with the same knobs skips
+compilation entirely.  A ``system=`` :class:`repro.system.SystemConfig`
+prices every bucket on the multi-chip plan instead of one chip.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
+import os
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 from ..core.arch import ChipConfig, default_chip
-from ..flow import CompileOptions, compile as flow_compile
+from ..core.machine import Calibration
+from ..flow import (CompileOptions, PassDiskCache, compile as flow_compile,
+                    default_pipeline, load_calibration)
+from ..flow.diskcache import ENV_VAR as _FLOW_CACHE_ENV
 from .bucketing import bucket_boundaries, bucket_for
 
 __all__ = ["ServeModelCfg", "StepCostTable"]
+
+_TABLE_VERSION = 1
 
 
 @dataclass(frozen=True)
@@ -65,7 +82,10 @@ class StepCostTable:
                  fidelity: str = "trace",
                  bucket_step: float = 2.0,
                  fit_batch: int = 8,
-                 incremental: bool = True) -> None:
+                 incremental: bool = True,
+                 system: Optional[Any] = None,
+                 calibration: Union[Calibration, str, None] = None,
+                 flow_cache: Optional[str] = None) -> None:
         if fit_batch < 2:
             raise ValueError("fit_batch must be >= 2 for an affine fit")
         self.cfg = cfg
@@ -73,6 +93,10 @@ class StepCostTable:
         self.fidelity = fidelity
         self.fit_batch = fit_batch
         self.incremental = incremental
+        self.system = system
+        if isinstance(calibration, str):
+            calibration = load_calibration(calibration)
+        self.calibration = calibration
         self._hz = self.chip.clock_ghz * 1e9
         self.prefill_buckets = bucket_boundaries(
             cfg.max_prompt, step=bucket_step)
@@ -81,13 +105,69 @@ class StepCostTable:
         self._prefill_s: Dict[int, float] = {}
         self._decode_base_s: Dict[int, float] = {}
         self._decode_per_seq_s: Dict[int, float] = {}
-        self._build()
+        self.cache_hit = False
+        disk = self._attach_flow_cache(flow_cache)
+        key = self._table_key() if disk is not None else None
+        if disk is not None:
+            hit, val = disk.get(key)
+            if hit and isinstance(val, dict) \
+                    and val.get("v") == _TABLE_VERSION:
+                self._prefill_s = {int(k): float(v) for k, v
+                                   in val["prefill_s"].items()}
+                self._decode_base_s = {int(k): float(v) for k, v
+                                       in val["decode_base_s"].items()}
+                self._decode_per_seq_s = {
+                    int(k): float(v) for k, v
+                    in val["decode_per_seq_s"].items()}
+                self.cache_hit = True
+        if not self.cache_hit:
+            self._build()
+            if disk is not None:
+                disk.put(key, {
+                    "v": _TABLE_VERSION,
+                    "prefill_s": dict(self._prefill_s),
+                    "decode_base_s": dict(self._decode_base_s),
+                    "decode_per_seq_s": dict(self._decode_per_seq_s)})
 
     # -- construction -------------------------------------------------
 
+    @staticmethod
+    def _attach_flow_cache(flow_cache: Optional[str]
+                           ) -> Optional[PassDiskCache]:
+        """Bind the flow pass disk cache (same discipline as
+        ``explore.ExplorationEngine``) and return whichever disk tier
+        ends up active — the whole-table cache rides in it too, so one
+        directory serves both pass outputs and finished tables."""
+        if flow_cache:
+            os.environ[_FLOW_CACHE_ENV] = flow_cache
+            pipe = default_pipeline()
+            if pipe.disk is None or pipe.disk.root != flow_cache:
+                pipe.disk = PassDiskCache(flow_cache)
+        return default_pipeline().disk
+
+    def _table_key(self) -> str:
+        payload = {
+            "v": _TABLE_VERSION,
+            "chip": dataclasses.asdict(self.chip),
+            "fidelity": self.fidelity,
+            "fit_batch": self.fit_batch,
+            "incremental": self.incremental,
+            "model": self.cfg.to_dict(),
+            "prefill_buckets": list(self.prefill_buckets),
+            "decode_buckets": list(self.decode_buckets),
+            "system": (self.system.to_dict()
+                       if self.system is not None else None),
+            "calibration": (self.calibration.to_dict()
+                            if self.calibration is not None else None),
+        }
+        blob = json.dumps(payload, sort_keys=True, default=str)
+        return ("servetable-"
+                + hashlib.sha256(blob.encode("utf-8")).hexdigest())
+
     def _compile(self, workload: str, kw: Dict[str, Any]):
         return flow_compile(workload, self.chip, CompileOptions(
-            workload_kw=kw, fidelity=self.fidelity, batch=1))
+            workload_kw=kw, fidelity=self.fidelity, batch=1,
+            system=self.system, calibration=self.calibration))
 
     def _build(self) -> None:
         c = self.cfg
@@ -141,6 +221,8 @@ class StepCostTable:
             "fidelity": self.fidelity,
             "fit_batch": self.fit_batch,
             "incremental": self.incremental,
+            "system": (self.system.to_dict()
+                       if self.system is not None else None),
             "model": self.cfg.to_dict(),
             "prefill_s": {str(k): v
                           for k, v in sorted(self._prefill_s.items())},

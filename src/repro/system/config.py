@@ -1,0 +1,120 @@
+"""System-level structural description: a 2D mesh of chips.
+
+:class:`SystemConfig` is to the *system* what
+:class:`~repro.core.arch.ChipConfig` is to one chip: pure structure —
+how many chips, how they are arranged, which inter-chip link tier ties
+them together, and how many of each chip's global-memory ports are
+reserved for off-chip ("boundary") traffic.  Every timing/energy rule
+for those links lives in :class:`~repro.core.machine.InterChipLink` /
+the :class:`~repro.core.machine.MachineModel` accessors — this module
+deliberately contains no constants of its own.
+
+Pipeline-parallel plans place consecutive stages on consecutive chips
+of a *snake* ordering of the mesh, so adjacent stages are one hop
+apart; transfers between non-adjacent stages pay the Manhattan
+distance between their chips' mesh coordinates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Tuple, Union
+
+from ..core.machine import InterChipLink, link_tier
+
+__all__ = ["SystemConfig", "PARALLEL_MODES"]
+
+PARALLEL_MODES = ("pipeline", "tensor")
+
+
+@dataclass(frozen=True)
+class SystemConfig:
+    """A mesh of identical chips plus the link tier joining them.
+
+    ``parallel`` selects the system-level partitioner: ``pipeline``
+    (contiguous stage ranges per chip, SEND/RECV at the cuts) or
+    ``tensor`` (every MVM group sharded across all chips, collectives
+    at shard boundaries).  ``boundary_ports`` caps how many of a chip's
+    gmem ports an inter-chip transfer may drain through — the
+    contention model of :meth:`MachineModel.interchip_transfer_cycles`.
+    """
+
+    chips_x: int = 1
+    chips_y: int = 1
+    link: Union[InterChipLink, str] = "pcb"
+    boundary_ports: int = 2
+    parallel: str = "pipeline"
+
+    def __post_init__(self) -> None:
+        if self.chips_x < 1 or self.chips_y < 1:
+            raise ValueError(f"mesh dims must be >= 1, got "
+                             f"{self.chips_x}x{self.chips_y}")
+        if isinstance(self.link, str):
+            object.__setattr__(self, "link", link_tier(self.link))
+        if not isinstance(self.link, InterChipLink):
+            raise TypeError(f"link must be an InterChipLink or tier "
+                            f"name, got {type(self.link).__name__}")
+        if self.boundary_ports < 1:
+            raise ValueError("boundary_ports must be >= 1")
+        if self.parallel not in PARALLEL_MODES:
+            raise ValueError(f"parallel must be one of {PARALLEL_MODES},"
+                             f" got {self.parallel!r}")
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def n_chips(self) -> int:
+        return self.chips_x * self.chips_y
+
+    def coord(self, slot: int) -> Tuple[int, int]:
+        """Mesh (row, col) of logical chip ``slot`` in snake order —
+        slot ``k`` and ``k+1`` are always mesh neighbours."""
+        if not 0 <= slot < self.n_chips:
+            raise IndexError(f"chip slot {slot} out of range "
+                             f"0..{self.n_chips - 1}")
+        row, r = divmod(slot, self.chips_x)
+        col = r if row % 2 == 0 else self.chips_x - 1 - r
+        return row, col
+
+    def hops(self, a: int, b: int) -> int:
+        """Manhattan distance between two logical chip slots."""
+        ra, ca = self.coord(a)
+        rb, cb = self.coord(b)
+        return abs(ra - rb) + abs(ca - cb)
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"chips_x": self.chips_x, "chips_y": self.chips_y,
+                "link": self.link.to_dict(),
+                "boundary_ports": self.boundary_ports,
+                "parallel": self.parallel}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SystemConfig":
+        link = d.get("link", "pcb")
+        if isinstance(link, Mapping):
+            link = InterChipLink.from_dict(link)
+        return cls(chips_x=int(d.get("chips_x", 1)),
+                   chips_y=int(d.get("chips_y", 1)), link=link,
+                   boundary_ports=int(d.get("boundary_ports", 2)),
+                   parallel=str(d.get("parallel", "pipeline")))
+
+    @classmethod
+    def mesh(cls, n_chips: int, **kw: Any) -> "SystemConfig":
+        """The squarest mesh holding ``n_chips`` (4 -> 2x2, 8 -> 2x4)."""
+        n = int(n_chips)
+        if n < 1:
+            raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+        best = 1
+        for c in range(1, int(n ** 0.5) + 1):
+            if n % c == 0:
+                best = c
+        return cls(chips_x=n // best, chips_y=best, **kw)
+
+    def describe(self) -> str:
+        return (f"system {self.chips_x}x{self.chips_y} chips, "
+                f"{self.parallel}-parallel, link '{self.link.name}' "
+                f"({self.link.bytes_per_cycle:g} B/cyc, "
+                f"{self.link.hop_cycles} cyc/hop), "
+                f"{self.boundary_ports} boundary ports")

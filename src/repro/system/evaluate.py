@@ -1,0 +1,114 @@
+"""Multi-chip plan evaluation: stitch per-chip reports over the links.
+
+One :class:`SystemReport` (an :class:`~repro.flow.backends.EvalReport`
+subclass, so every existing consumer — serve, explore, benchmarks —
+reads it unchanged) per evaluation:
+
+* **pipeline mode** — ``cycles`` is the *fill* makespan of one batch
+  through all chips (per-chip latencies + every cut transfer, priced
+  gmem-port-contended on the configured link tier), while
+  ``throughput_sps`` reflects pipelined steady state: the bottleneck
+  chip's latency plus its incident transfers.  At trace fidelity the
+  per-chip :class:`~repro.core.trace.TraceReport` replays are stitched
+  (:meth:`TraceReport.stitch`) into one system-level trace.
+* **tensor mode** — chips run the same stage sequence on shards, so
+  ``cycles`` is the slowest chip plus the per-group collectives
+  (ring all-gather / all-reduce, see
+  :meth:`MachineModel.interchip_collective_cycles`).
+
+Energy is the per-chip breakdown summed key-wise plus an ``interchip``
+category priced from the plan's total link traffic at the tier's
+pJ/byte — single-chip reports keep their exact historical shape (no
+new zero-valued keys).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..core.machine import machine_for
+from ..core.trace import TraceReport
+from ..flow.backends import EvalReport, _throughput
+from .partition import SystemPlan
+
+__all__ = ["SystemReport", "evaluate_plan"]
+
+
+@dataclass
+class SystemReport(EvalReport):
+    """One multi-chip evaluation (EvalReport shape + system extras)."""
+
+    mode: str = "pipeline"
+    n_chips: int = 1
+    comm_cycles: float = 0.0           # inter-chip transfer/collective
+    bottleneck_cycles: float = 0.0     # steady-state pipeline interval
+    per_chip: List[EvalReport] = field(default_factory=list)
+
+    def summary(self) -> str:
+        return (f"[{self.backend}/{self.mode}x{self.n_chips}] "
+                f"{self.cycles:.0f} cycles "
+                f"({self.comm_cycles:.0f} inter-chip), "
+                f"{self.energy_total / 1e6:.3f} mJ, "
+                f"{self.throughput_sps:.1f} samples/s "
+                f"(batch={self.batch})")
+
+
+def _merge_energy(reports: List[EvalReport],
+                  interchip_nj: float) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for r in reports:
+        for k, v in r.energy.items():
+            if k == "total":
+                continue
+            out[k] = out.get(k, 0.0) + v
+    if interchip_nj > 0:
+        out["interchip"] = out.get("interchip", 0.0) + interchip_nj
+    out["total"] = sum(out.values())
+    return out
+
+
+def evaluate_plan(plan: SystemPlan, chip: Any, reports: List[EvalReport],
+                  batch: int, calibration: Any = None,
+                  backend_name: str = "analytic") -> SystemReport:
+    """Stitch per-chip backend reports into one system report."""
+    t0 = time.perf_counter()
+    sys = plan.system
+    m = machine_for(chip, calibration)
+    link, ports = sys.link, sys.boundary_ports
+    n = plan.n_chips
+
+    if plan.mode == "pipeline":
+        incident = [0.0] * n
+        comm = 0.0
+        for t in plan.transfers:
+            cyc = m.interchip_transfer_cycles(
+                t.nbytes * batch, link, hops=t.hops, ports=ports)
+            comm += cyc
+            incident[t.src_chip] += cyc
+            incident[t.dst_chip] += cyc
+        cycles = sum(r.cycles for r in reports) + comm
+        bottleneck = max(r.cycles + incident[i]
+                         for i, r in enumerate(reports))
+    else:                                      # tensor
+        comm = sum(m.interchip_collective_cycles(
+            c.nbytes * batch, link, sys.n_chips, kind=c.kind,
+            ports=ports) for c in plan.collectives)
+        cycles = max(r.cycles for r in reports) + comm
+        bottleneck = cycles
+
+    interchip_nj = m.interchip_energy_nj(plan.transfer_bytes(batch),
+                                         link)
+    stitched: Optional[TraceReport] = None
+    if plan.mode == "pipeline" and all(r.trace is not None
+                                       for r in reports):
+        stitched = TraceReport.stitch([r.trace for r in reports],
+                                      link_cycles=comm)
+    return SystemReport(
+        backend=backend_name, cycles=float(cycles),
+        energy=_merge_energy(reports, interchip_nj),
+        throughput_sps=_throughput(chip, bottleneck, batch),
+        batch=batch, wall_s=time.perf_counter() - t0, trace=stitched,
+        mode=plan.mode, n_chips=n, comm_cycles=float(comm),
+        bottleneck_cycles=float(bottleneck), per_chip=list(reports))

@@ -1,0 +1,266 @@
+"""Mesh-of-chips scale-out: plan conservation, 1x1 identity, func
+bit-exactness across pipeline cuts, the capacity wall, multi-chip DSE
+and the cached serving cost table.
+
+The invariants pinned here are the ones that make the system layer
+trustworthy rather than merely plausible:
+
+* splitting a model across chips must conserve work exactly (MACs and
+  output bytes are partition-invariant);
+* a 1x1 "mesh" must be the identity — same cycles, same ISA streams
+  as the classic single-chip compile;
+* a pipeline-cut functional run (chips executing sequentially, blobs
+  harvested over the wire) must be bit-exact with the single-chip
+  numpy oracle;
+* a model whose resident weights exceed one chip's gmem must be
+  rejected single-chip and accepted multi-chip (capacity, not speed,
+  is what the mesh buys first).
+"""
+
+import numpy as np
+import pytest
+
+from repro import flow
+from repro.core import ref, workloads
+from repro.core.arch import default_chip
+from repro.core.mapping import gmem_footprint_bytes
+from repro.flow import CompileOptions
+from repro.core.partition import InfeasibleModel
+from repro.system import SystemConfig, split_pipeline, shard_tensor
+
+RNG = np.random.default_rng(7)
+
+# the func-ladder transformer config used across the suite (full-size
+# transformer never func-compiles single-chip under strict lmem)
+SMALL_TF = dict(n_layers=1, d_model=128, n_heads=4, seq=16, vocab=64)
+
+
+def _weights_for(cg):
+    """Random int8 weights/biases in the (K, N) matrix layout."""
+    src = cg.source
+    weights, biases = {}, {}
+    for g in cg:
+        if g.anchor is None:
+            continue
+        op = src.ops[g.anchor]
+        lo, hi = -6, 7
+        if op.kind == "conv":
+            k = op.attrs["k"]
+            cin = src.ops[op.inputs[0]].out_shape[-1]
+            ker = RNG.integers(lo, hi, (k, k, cin, op.gemm_n),
+                               dtype=np.int8)
+            weights[g.idx] = ref.conv_weight_matrix(ker)
+        elif op.kind == "dwconv":
+            k = op.attrs["k"]
+            ker = RNG.integers(lo, hi, (k, k, op.groups), dtype=np.int8)
+            weights[g.idx] = ref.dwconv_weight_matrix(ker)
+        elif op.kind == "linear":
+            weights[g.idx] = RNG.integers(lo, hi, (g.gemm_k, g.gemm_n),
+                                          dtype=np.int8)
+        if "bias" in ref._vops(cg, g):
+            biases[g.idx] = RNG.integers(-40, 40, g.gemm_n
+                                         * (g.groups if g.groups > 1
+                                            else 1)).astype(np.int32)
+    return weights, biases
+
+
+def _func_vs_oracle(workload, chip, n_chips, batch=2, workload_kw=None):
+    """Compile a pipeline mesh, run func, compare to the numpy oracle."""
+    art = flow.compile(workload, chip, CompileOptions(
+        fidelity="func", batch=batch, workload_kw=workload_kw or {},
+        system=SystemConfig.mesh(n_chips)))
+    cg = art.cg
+    weights, biases = _weights_for(cg)
+    inputs = RNG.integers(-8, 8, (batch,) + cg.source.ops[0].out_shape
+                          ).astype(np.int8)
+    qp = ref.auto_quant(cg, weights, biases, inputs)
+    got = art.run_func(weights, biases, inputs, quant=qp)
+    oracle = ref.run_reference(cg, weights, biases, qp, inputs)
+    last = len(cg) - 1
+    for s in range(batch):
+        np.testing.assert_array_equal(
+            got.final[s], oracle[last][s].reshape(-1),
+            err_msg=f"sample {s} mismatch on {n_chips} chips")
+    return art
+
+
+# ---------------------------------------------------------------------------
+# conservation: splitting never creates or destroys work
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_pipeline_conserves_work(n):
+    cg = workloads.build("transformer").condense()
+    chip = default_chip()
+    plan = split_pipeline(cg, chip, SystemConfig.mesh(n))
+    assert plan.total_macs() == cg.total_macs
+    assert sum(s.out_bytes for s in plan.slices) == \
+        sum(g.out_bytes for g in cg)
+    # contiguous, disjoint, complete coverage
+    covered = [g for s in plan.slices for g in s.gids]
+    assert covered == list(range(len(cg)))
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_tensor_conserves_work(n):
+    cg = workloads.build("transformer").condense()
+    chip = default_chip()
+    plan = shard_tensor(cg, chip, SystemConfig.mesh(
+        n, parallel="tensor"))
+    assert plan.total_macs() == cg.total_macs
+
+
+# ---------------------------------------------------------------------------
+# 1x1 mesh == single chip, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_1x1_mesh_is_identity():
+    chip = default_chip()
+    solo = flow.compile("tiny_cnn", chip,
+                        CompileOptions(fidelity="simulate"))
+    mesh = flow.compile("tiny_cnn", chip, CompileOptions(
+        fidelity="simulate", system=SystemConfig(chips_x=1, chips_y=1)))
+    assert mesh.n_chips == 1
+    rep_solo = solo.evaluate()
+    rep_mesh = mesh.evaluate()
+    assert rep_mesh.cycles == rep_solo.cycles
+    assert rep_mesh.comm_cycles == 0
+    # the inner artifact is a real single-chip compile of the original
+    # workload: identical ISA streams, not merely identical totals
+    inner = mesh.chips[0]
+    assert len(inner.model.stages) == len(solo.model.stages)
+    for st_a, st_b in zip(inner.model.stages, solo.model.stages):
+        assert sorted(st_a.programs) == sorted(st_b.programs)
+        for core in st_a.programs:
+            assert str(st_a.programs[core]) == str(st_b.programs[core])
+
+
+# ---------------------------------------------------------------------------
+# func bit-exactness across pipeline cuts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_pipeline_func_tiny_cnn(n):
+    art = _func_vs_oracle("tiny_cnn", default_chip(), n)
+    assert art.n_chips >= 2
+    assert art.plan.transfers        # at least one cut crossed
+
+
+def test_pipeline_func_transformer():
+    """Residual taps crossing a cut (side operand arrives as a slice
+    input) stay bit-exact — the codegen side-input path."""
+    art = _func_vs_oracle("transformer", default_chip(), 2,
+                          workload_kw=SMALL_TF)
+    assert art.n_chips == 2
+
+
+def test_pipeline_energy_has_interchip_key():
+    art = flow.compile("transformer", default_chip(), CompileOptions(
+        fidelity="analytic", system=SystemConfig.mesh(2)))
+    rep = art.evaluate()
+    assert rep.n_chips == 2
+    assert rep.comm_cycles > 0
+    assert rep.energy.get("interchip", 0) > 0
+    assert rep.energy["total"] >= rep.energy["interchip"]
+
+
+# ---------------------------------------------------------------------------
+# the capacity wall: multi-chip extends reach, not just speed
+# ---------------------------------------------------------------------------
+
+
+def test_deepseek_proxy_needs_a_mesh():
+    chip = default_chip()
+    cg = workloads.build("deepseek_proxy").condense()
+    assert gmem_footprint_bytes(cg.groups) > chip.global_mem_bytes
+    for n in (1, 2):
+        with pytest.raises(InfeasibleModel):
+            flow.compile("deepseek_proxy", chip, CompileOptions(
+                fidelity="analytic", system=SystemConfig.mesh(n)))
+    art = flow.compile("deepseek_proxy", chip, CompileOptions(
+        fidelity="analytic", system=SystemConfig.mesh(4)))
+    assert art.n_chips == 4
+    assert art.evaluate().cycles > 0
+    # tensor-parallel sharding also clears the wall at 4 chips
+    art_t = flow.compile("deepseek_proxy", chip, CompileOptions(
+        fidelity="analytic",
+        system=SystemConfig.mesh(4, parallel="tensor")))
+    assert art_t.evaluate().cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# multi-chip DSE
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fidelity", ["analytic", "trace"])
+def test_mesh_dse_sweep(fidelity, tmp_path):
+    from repro.explore import ExplorationEngine, mesh_space
+    space = mesh_space(chips=(1, 2, 4), links=("interposer", "pcb"))
+    pts = space.points()
+    assert len(pts) == 6
+    eng = ExplorationEngine("transformer", cache=str(tmp_path))
+    recs = eng.evaluate(pts, fidelity=fidelity)
+    assert all(r.error is None for r in recs)
+    by = {(r.point.chips, r.point.link): r for r in recs}
+    # scale-out helps throughput; a slower link tier can't be faster
+    assert by[(2, "interposer")].throughput_sps > \
+        by[(1, "interposer")].throughput_sps
+    assert by[(2, "interposer")].cycles <= by[(2, "pcb")].cycles
+    # second pass is pure cache
+    again = eng.evaluate(pts, fidelity=fidelity)
+    assert all(r.cache_hit for r in again)
+    assert [r.cycles for r in again] == [r.cycles for r in recs]
+
+
+def test_design_point_system_axes_default_off():
+    """chips=1 points build no SystemConfig and keep legacy dict/keys."""
+    from repro.explore import DesignPoint
+    pt = DesignPoint()
+    assert pt.system() is None
+    # old serialized points (pre-scale-out) still round-trip
+    legacy = {"macros_per_group": 8, "n_macro_groups": 16,
+              "n_cores": 64, "flit_bytes": 8, "local_mem_kb": 512,
+              "strategy": "generic"}
+    assert DesignPoint.from_dict(legacy) == pt
+    assert DesignPoint.from_dict(pt.to_dict()) == pt
+    pt4 = pt.replace(chips=4, link="interposer")
+    assert pt4.system().n_chips == 4
+    assert pt4.system().link.name == "interposer"
+
+
+# ---------------------------------------------------------------------------
+# serving: multi-chip tables + whole-table disk cache
+# ---------------------------------------------------------------------------
+
+
+def test_serve_table_disk_cache(tmp_path):
+    from repro.serve import ServeModelCfg, StepCostTable
+    cfg = ServeModelCfg(n_layers=1, d_model=64, n_heads=2, vocab=64,
+                        max_prompt=16, max_new=16)
+    kw = dict(fidelity="analytic", flow_cache=str(tmp_path))
+    t1 = StepCostTable(cfg, **kw)
+    assert not t1.cache_hit
+    t2 = StepCostTable(cfg, **kw)
+    assert t2.cache_hit
+    assert t2.to_dict() == t1.to_dict()
+    # a different mesh is a different table, not a stale hit
+    t3 = StepCostTable(cfg, system=SystemConfig.mesh(2), **kw)
+    assert not t3.cache_hit
+    assert t3.to_dict()["system"] is not None
+
+
+def test_serve_cli_chips_parsing():
+    from repro.serve.__main__ import _system, build_parser
+    p = build_parser()
+    assert _system(p.parse_args(["--chips", "1"])) is None
+    sysc = _system(p.parse_args(["--chips", "2x2",
+                                 "--link", "interposer"]))
+    assert (sysc.chips_x, sysc.chips_y) == (2, 2)
+    assert sysc.link.name == "interposer"
+    assert _system(p.parse_args(["--chips", "4"])).n_chips == 4
+    with pytest.raises(SystemExit):
+        _system(p.parse_args(["--chips", "zero"]))
