@@ -25,7 +25,7 @@ images (`conv_weight_matrix`, `dwconv_weight_matrix`).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -35,7 +35,13 @@ from .graph import CondensedGraph, Graph
 from .oplevel import Im2colSpec
 
 __all__ = ["conv_weight_matrix", "dwconv_weight_matrix", "im2col",
-           "quantize", "run_reference", "auto_quant"]
+           "quantize", "run_reference", "auto_quant", "random_init"]
+
+# the INT8 x INT8 -> INT32 accumulator contraction; swappable so the
+# same oracle can execute its MVMs on an accelerator kernel (see
+# ``flow.backends.PallasFuncBackend``) while everything around the
+# matmul stays pure numpy
+MatmulFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 
 
 def conv_weight_matrix(kernel: np.ndarray) -> np.ndarray:
@@ -107,9 +113,18 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
                   biases: Dict[int, np.ndarray],
                   quant: Dict[int, QuantParams],
                   inputs: np.ndarray,
-                  return_acc: bool = False) -> Dict[int, np.ndarray]:
+                  return_acc: bool = False,
+                  matmul: Optional[MatmulFn] = None
+                  ) -> Dict[int, np.ndarray]:
     """Forward-pass every sample; returns {gid: (batch, ...) int8 maps}
-    (conv groups: (B, ho', wo', N) post-fusion; vector groups: (B, N))."""
+    (conv groups: (B, ho', wo', N) post-fusion; vector groups: (B, N)).
+
+    ``matmul`` overrides the accumulator contraction
+    ``(M, K) int32 x (K, N) int32 -> (M, N) int32`` (operand *values*
+    always fit int8); the default is the numpy ``@``.
+    """
+    mm: MatmulFn = matmul if matmul is not None else (
+        lambda a, b: a @ b)
     src = cg.source
     assert src is not None, "reference needs the source graph"
     op_owner = {}
@@ -143,11 +158,11 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
             if spec is not None:
                 k, stride, pad, dw = spec
                 patches = im2col(x, k, k, stride, pad, dw).astype(np.int32)
-                acc = patches @ W
+                acc = mm(patches, W)
                 anchor_op = src.ops[g.anchor]
                 ho, wo, n = anchor_op.out_shape
             else:
-                acc = x.reshape(-1, W.shape[0]).astype(np.int32) @ W
+                acc = mm(x.reshape(-1, W.shape[0]).astype(np.int32), W)
                 ho, wo, n = 1, 1, W.shape[1]
             acc_dbg.append(acc.copy())
             sv = (outs[side[0]][s] if side
@@ -258,6 +273,48 @@ def _pool_of(cg: CondensedGraph, g):
 def _gap_of(cg: CondensedGraph, g) -> bool:
     src = cg.source
     return any(src.ops[i].kind == "globalpool" for i in g.op_ids)
+
+
+def random_init(cg: CondensedGraph, batch: int = 1, seed: int = 0
+                ) -> Tuple[Dict[int, np.ndarray],
+                           Dict[int, np.ndarray], np.ndarray]:
+    """Random int8 ``(weights, biases, inputs)`` for a condensed graph.
+
+    Weights land in the ``(K_total, N_total)`` matrix layout codegen
+    loads (conv kernels through :func:`conv_weight_matrix`, depth-wise
+    through :func:`dwconv_weight_matrix`); values stay small so a few
+    fused layers don't saturate before :func:`auto_quant` picks shifts.
+    """
+    src = cg.source
+    assert src is not None, "random_init needs the source graph"
+    rng = np.random.default_rng(seed)
+    weights: Dict[int, np.ndarray] = {}
+    biases: Dict[int, np.ndarray] = {}
+    lo, hi = -6, 7
+    for g in cg:
+        if g.anchor is None:
+            continue
+        op = src.ops[g.anchor]
+        if op.kind == "conv":
+            k = op.attrs["k"]
+            cin = src.ops[op.inputs[0]].out_shape[-1]
+            ker = rng.integers(lo, hi, (k, k, cin, op.gemm_n),
+                               dtype=np.int8)
+            weights[g.idx] = conv_weight_matrix(ker)
+        elif op.kind == "dwconv":
+            k = op.attrs["k"]
+            ker = rng.integers(lo, hi, (k, k, op.groups), dtype=np.int8)
+            weights[g.idx] = dwconv_weight_matrix(ker)
+        elif op.kind == "linear" and not g.dynamic_weights:
+            weights[g.idx] = rng.integers(lo, hi, (g.gemm_k, g.gemm_n),
+                                          dtype=np.int8)
+        if "bias" in _vops(cg, g):
+            biases[g.idx] = rng.integers(
+                -40, 40, g.gemm_n * (g.groups if g.groups > 1 else 1)
+            ).astype(np.int32)
+    inputs = rng.integers(-8, 8, (batch,) + src.ops[0].out_shape
+                          ).astype(np.int8)
+    return weights, biases, inputs
 
 
 def auto_quant(cg: CondensedGraph, weights: Dict[int, np.ndarray],

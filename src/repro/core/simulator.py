@@ -55,9 +55,13 @@ __all__ = ["Simulator", "SimReport", "SimError", "ENGINES"]
 # Perf-mode execution engines: "vector" replays pre-decoded basic blocks
 # (see :mod:`repro.core.vectorsim`), "scalar" interprets one instruction
 # at a time, "auto" vectorizes when the program is statically decodable
-# and falls back to the interpreter otherwise.  ``mode="func"`` always
+# and falls back to the interpreter otherwise, and "jax" runs the
+# decode's dataflow/latency passes as one jitted XLA program per
+# decode-table shape (see :mod:`repro.core.jaxsim`) — bit-identical to
+# "vector"/"scalar", with the same scalar fallback as "auto" for
+# programs outside the decodable subset.  ``mode="func"`` always
 # interprets (data semantics are inherently per-instruction).
-ENGINES = ("auto", "vector", "scalar")
+ENGINES = ("auto", "vector", "scalar", "jax")
 
 
 class SimError(RuntimeError):
@@ -155,7 +159,7 @@ class Simulator:
         if engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {engine!r}")
-        if engine == "vector" and mode == "func":
+        if engine in ("vector", "jax") and mode == "func":
             raise ValueError("functional mode requires the scalar "
                              "engine (engine='auto' or 'scalar')")
         self.chip = chip
@@ -183,8 +187,13 @@ class Simulator:
         stage_cycles: List[float] = []
         instrs = 0
         vectorize = not self.func and self.engine != "scalar"
+        if self.engine == "jax":
+            from . import jaxsim           # lazy: jax is heavyweight
+            stage_fn = jaxsim.run_stage
+        else:
+            stage_fn = vectorsim.run_stage
         for sp in model.stages:
-            out = vectorsim.run_stage(self, sp) if vectorize else None
+            out = stage_fn(self, sp) if vectorize else None
             if out is None:
                 if self.engine == "vector":
                     raise SimError(

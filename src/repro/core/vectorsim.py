@@ -116,6 +116,140 @@ class _DecodedStage:
         self.n_static = 0                         # block-op instructions
 
 
+class _Prep:
+    """Machine-independent front half of a stage decode.
+
+    Holds the concatenated, dead-code-filtered instruction columns of
+    every *batchable* program of a stage, plus the lists of empty and
+    unroll-needed programs.  Produced by :meth:`StageDecoder._prep` and
+    consumed by both the numpy passes (:meth:`StageDecoder.decode_stage`)
+    and the JAX engine (:mod:`repro.core.jaxsim`), which share it so a
+    fleet evaluation preps each stage exactly once.
+    """
+
+    __slots__ = ("cids", "packs", "sizes", "offs", "op", "kind", "pid",
+                 "starts", "n", "n_prog", "empty", "unroll",
+                 "_colcache", "_live", "_all_live", "_zeros")
+
+    def __init__(self) -> None:
+        self.cids: List[int] = []
+        self.packs: List[Any] = []
+        self.n_prog: Dict[int, int] = {}
+        self.empty: List[int] = []
+        self.unroll: List[Tuple[int, Program]] = []
+        self.n = 0
+        self._colcache: Dict[str, np.ndarray] = {}
+        self._zeros: Optional[np.ndarray] = None
+
+    def col(self, name: str) -> np.ndarray:
+        """Concatenated operand column (zeros where ops lack it)."""
+        c = self._colcache.get(name)
+        if c is None:
+            if self._zeros is None:
+                self._zeros = np.zeros(self.n, dtype=np.int64)
+            parts = [p.args.get(name) for p in self.packs]
+            if not any(x is not None for x in parts):
+                c = self._zeros
+            else:
+                c = (parts[0] if len(self.packs) == 1
+                     else np.concatenate(
+                         [x if x is not None
+                          else np.zeros(s, dtype=np.int64)
+                          for x, s in zip(parts, self.sizes.tolist())]))
+                if not self._all_live:
+                    c = c[self._live]
+            self._colcache[name] = c
+        return c
+
+
+def _finish_decode(out: _DecodedStage, pr: _Prep, unit: np.ndarray,
+                   lat: np.ndarray, bitems: Dict[int, tuple],
+                   ev_tot: List[float], ev_cnt: List[int]) -> None:
+    """Back half of a stage decode, shared by the numpy and JAX paths.
+
+    From the per-instruction latencies and resolved boundary items,
+    collapse each program into unit runs + boundary replay items and
+    accumulate the static busy / event / instruction totals into
+    ``out``.  Everything here is plain numpy over ``pr``'s columns, so
+    both engines produce byte-identical replay plans given identical
+    ``lat`` / ``bitems``.
+    """
+    kind, pid, offs = pr.kind, pr.pid, pr.offs
+    cids, n = pr.cids, pr.n
+    bmask = kind >= _K_SEND
+    bound_pos = np.flatnonzero(bmask)
+    for p in np.flatnonzero(kind == _K_HALT).tolist():
+        bitems[p] = (_K_HALT,)
+
+    # ---- unit runs --------------------------------------------------
+    nb = ~bmask
+    run_start = nb.copy()
+    run_start[1:] &= (unit[1:] != unit[:-1]) | bmask[:-1]
+    run_start[offs[:-1]] = nb[offs[:-1]]         # break at core boundary
+    rs = np.flatnonzero(run_start)
+    mstep = np.maximum(1.0, lat)
+    mstep[bmask] = 0.0
+    if len(rs):
+        marks = np.flatnonzero(run_start | bmask)
+        mext = np.append(marks, n)
+        ends = mext[np.searchsorted(marks, rs, side="right")] - 1
+        run_A = np.add.reduceat(mstep, rs) - mstep[ends]
+        runs = list(zip(unit[rs].tolist(), run_A.tolist(),
+                        lat[ends].tolist()))
+    else:
+        runs = []
+
+    # ---- static stage totals ----------------------------------------
+    lat_nb = np.where(bmask, 0.0, lat)
+    busy = np.bincount(unit, weights=lat_nb, minlength=4)
+    cnt = np.bincount(unit[nb], minlength=4)
+    for u in range(4):
+        out.busy[u] += float(busy[u])
+        out.unit_used[u] = out.unit_used[u] or bool(cnt[u])
+    for k in range(4):
+        out.events[k] += ev_tot[k]
+        out.ev_present[k] = out.ev_present[k] or ev_cnt[k] > 0
+    out.n_static += int(nb.sum())
+
+    # ---- assemble per-core replay items -----------------------------
+    # all run-index lookups batched: for each boundary, the block
+    # before it spans runs [kp, kb); per-program tails span [kt, kh)
+    nb_b = len(bound_pos)
+    prange = np.arange(len(pr.packs))
+    b_by_pid = pid[bound_pos]
+    b_first = np.searchsorted(b_by_pid, prange, side="left")
+    b_last = np.searchsorted(b_by_pid, prange, side="right")
+    prev_pos = np.empty(nb_b, dtype=np.int64)
+    if nb_b:
+        prev_pos[0] = offs[b_by_pid[0]]
+        same = b_by_pid[1:] == b_by_pid[:-1]
+        prev_pos[1:] = np.where(same, bound_pos[:-1] + 1,
+                                offs[b_by_pid[1:]])
+    kb = np.searchsorted(rs, bound_pos).tolist()
+    kp = np.searchsorted(rs, prev_pos).tolist()
+    tail_pos = np.where(b_last > b_first,
+                        bound_pos[np.maximum(b_last - 1, 0)] + 1
+                        if nb_b else offs[:-1],
+                        offs[:-1][prange])
+    kt = np.searchsorted(rs, tail_pos).tolist()
+    kh = np.searchsorted(rs, offs[1:]).tolist()
+    bp_list = bound_pos.tolist()
+    for p, cid in enumerate(cids):
+        items: List[tuple] = []
+        hi = int(offs[p + 1])
+        b0, b1 = int(b_first[p]), int(b_last[p])
+        for i in range(b0, b1):
+            if kb[i] > kp[i]:
+                items.append((_BLOCK, runs[kp[i]:kb[i]]))
+            items.append(bitems[bp_list[i]])
+        if kh[p] > kt[p]:
+            items.append((_BLOCK, runs[kt[p]:kh[p]]))
+        if not (b1 > b0 and bitems[bp_list[b1 - 1]][0] == _K_HALT
+                and bp_list[b1 - 1] == hi - 1):
+            items.append((_END,))
+        out.items[cid] = items
+
+
 class StageDecoder:
     """Decode tables for one (Isa, MachineModel) pair.
 
@@ -421,19 +555,22 @@ class StageDecoder:
 
     # -- decode -------------------------------------------------------------
 
-    def decode_stage(self, programs: Dict[int, Program]) -> _DecodedStage:
-        """Statically execute all of a stage's programs in one batch.
+    def _prep(self, programs: Dict[int, Program]) -> "_Prep":
+        """Shared front half of decode: pack, split off empty/unrolled
+        programs, drop dead code, and concatenate the batchable columns.
 
-        Raises :class:`DecodeUnsupported` when any live instruction is
-        outside the subset (the caller falls back to the interpreter).
+        Machine-independent — the numpy passes below and the JAX engine
+        (:mod:`repro.core.jaxsim`) both start from the same `_Prep`.
+        Raises :class:`DecodeUnsupported` for live instructions outside
+        the batchable subset.
         """
-        out = _DecodedStage()
-        cids: List[int] = []
-        packs = []
+        pr = _Prep()
+        cids = pr.cids
+        packs = pr.packs
         for cid, prog in programs.items():
-            out.n_prog[cid] = len(prog)
+            pr.n_prog[cid] = len(prog)
             if len(prog) == 0:
-                out.items[cid] = [(_END,)]
+                pr.empty.append(cid)
                 continue
             try:
                 # cache hit when codegen shipped the table with the
@@ -446,12 +583,12 @@ class StageDecoder:
                 # control flow / scalar-ALU chains: statically resolved
                 # by decode-time scalar pre-execution (perf mode's
                 # register file never depends on simulated data)
-                self.unroll_decode(prog, cid, out)
+                pr.unroll.append((cid, prog))
             else:
                 cids.append(cid)
                 packs.append(pk)
         if not cids:
-            return out
+            return pr
 
         sizes = np.array([p.op.size for p in packs], dtype=np.int64)
         offs = np.zeros(len(packs) + 1, dtype=np.int64)
@@ -476,7 +613,6 @@ class StageDecoder:
             offs = np.zeros(len(packs) + 1, dtype=np.int64)
             np.cumsum(n_eff, out=offs[1:])
         n = int(offs[-1])
-        starts = offs[:-1][pid]                  # program start of each pc
 
         if (kind == _K_UNSUP).any():
             bad = int(np.flatnonzero(kind == _K_UNSUP)[0])
@@ -485,25 +621,37 @@ class StageDecoder:
                 f"core {cids[p]}: instruction "
                 f"{programs[cids[p]].instrs[bad - int(offs[p])].op!r}")
 
-        _zeros = np.zeros(n, dtype=np.int64)
-        _colcache: Dict[str, np.ndarray] = {}
+        pr.sizes, pr.offs = sizes, offs
+        pr.op, pr.kind, pr.pid = op, kind, pid
+        pr.starts = offs[:-1][pid]               # program start of each pc
+        pr.n = n
+        pr._live, pr._all_live = live, all_live
 
-        def col(name: str) -> np.ndarray:
-            c = _colcache.get(name)
-            if c is None:
-                parts = [p.args.get(name) for p in packs]
-                if not any(x is not None for x in parts):
-                    c = _zeros
-                else:
-                    c = (parts[0] if len(packs) == 1
-                         else np.concatenate(
-                             [x if x is not None
-                              else np.zeros(s, dtype=np.int64)
-                              for x, s in zip(parts, sizes.tolist())]))
-                    if not all_live:
-                        c = c[live]
-                _colcache[name] = c
-            return c
+        is_addi = op == self.id_addi
+        dst, a_col = pr.col("dst"), pr.col("a")
+        bad = is_addi & (dst != 0) & (a_col != 0) & (a_col != dst)
+        if bad.any():
+            raise DecodeUnsupported("S_ADDI with cross-register source")
+        return pr
+
+    def decode_stage(self, programs: Dict[int, Program]) -> _DecodedStage:
+        """Statically execute all of a stage's programs in one batch.
+
+        Raises :class:`DecodeUnsupported` when any live instruction is
+        outside the subset (the caller falls back to the interpreter).
+        """
+        out = _DecodedStage()
+        pr = self._prep(programs)
+        out.n_prog = pr.n_prog
+        for cid in pr.empty:
+            out.items[cid] = [(_END,)]
+        for cid, prog in pr.unroll:
+            self.unroll_decode(prog, cid, out)
+        if not pr.cids:
+            return out
+
+        op, kind, pid = pr.op, pr.kind, pr.pid
+        starts, col = pr.starts, pr.col
 
         m = self.m
         unit = self.unit[op]
@@ -515,9 +663,6 @@ class StageDecoder:
         dst, a_col, imm = col("dst"), col("a"), col("imm")
         is_lui = op == self.id_lui
         is_addi = op == self.id_addi
-        bad = is_addi & (dst != 0) & (a_col != 0) & (a_col != dst)
-        if bad.any():
-            raise DecodeUnsupported("S_ADDI with cross-register source")
         wpos = np.flatnonzero((is_lui | is_addi) & (dst != 0))
         gmap: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         if len(wpos):
@@ -639,8 +784,6 @@ class StageDecoder:
             lat[bcast] = m.send_issue_cycles_array(size)
 
         # ---- boundary items --------------------------------------------
-        bmask = kind >= _K_SEND
-        bound_pos = np.flatnonzero(bmask)
         bitems: Dict[int, tuple] = {}
         for tag in (_K_SEND, _K_RECV):
             kpos = np.flatnonzero(kind == tag)
@@ -667,77 +810,8 @@ class StageDecoder:
             barrier = col("barrier")[sync]
             for p, b in zip(sync.tolist(), barrier.tolist()):
                 bitems[p] = (_K_SYNC, b)
-        if len(hpos):
-            for p in np.flatnonzero(kind == _K_HALT).tolist():
-                bitems[p] = (_K_HALT,)
 
-        # ---- unit runs --------------------------------------------------
-        nb = ~bmask
-        run_start = nb.copy()
-        run_start[1:] &= (unit[1:] != unit[:-1]) | bmask[:-1]
-        run_start[offs[:-1]] = nb[offs[:-1]]     # break at core boundary
-        rs = np.flatnonzero(run_start)
-        mstep = np.maximum(1.0, lat)
-        mstep[bmask] = 0.0
-        if len(rs):
-            marks = np.flatnonzero(run_start | bmask)
-            mext = np.append(marks, n)
-            ends = mext[np.searchsorted(marks, rs, side="right")] - 1
-            run_A = np.add.reduceat(mstep, rs) - mstep[ends]
-            runs = list(zip(unit[rs].tolist(), run_A.tolist(),
-                            lat[ends].tolist()))
-        else:
-            runs = []
-
-        # ---- static stage totals ----------------------------------------
-        lat_nb = np.where(bmask, 0.0, lat)
-        busy = np.bincount(unit, weights=lat_nb, minlength=4)
-        cnt = np.bincount(unit[nb], minlength=4)
-        for u in range(4):
-            out.busy[u] += float(busy[u])
-            out.unit_used[u] = out.unit_used[u] or bool(cnt[u])
-        for k in range(4):
-            out.events[k] += ev_tot[k]
-            out.ev_present[k] = out.ev_present[k] or ev_cnt[k] > 0
-        out.n_static += int(nb.sum())
-
-        # ---- assemble per-core replay items -----------------------------
-        # all run-index lookups batched: for each boundary, the block
-        # before it spans runs [kp, kb); per-program tails span [kt, kh)
-        nb_b = len(bound_pos)
-        prange = np.arange(len(packs))
-        b_by_pid = pid[bound_pos]
-        b_first = np.searchsorted(b_by_pid, prange, side="left")
-        b_last = np.searchsorted(b_by_pid, prange, side="right")
-        prev_pos = np.empty(nb_b, dtype=np.int64)
-        if nb_b:
-            prev_pos[0] = offs[b_by_pid[0]]
-            same = b_by_pid[1:] == b_by_pid[:-1]
-            prev_pos[1:] = np.where(same, bound_pos[:-1] + 1,
-                                    offs[b_by_pid[1:]])
-        kb = np.searchsorted(rs, bound_pos).tolist()
-        kp = np.searchsorted(rs, prev_pos).tolist()
-        tail_pos = np.where(b_last > b_first,
-                            bound_pos[np.maximum(b_last - 1, 0)] + 1
-                            if nb_b else offs[:-1],
-                            offs[:-1][prange])
-        kt = np.searchsorted(rs, tail_pos).tolist()
-        kh = np.searchsorted(rs, offs[1:]).tolist()
-        bp_list = bound_pos.tolist()
-        for p, cid in enumerate(cids):
-            items: List[tuple] = []
-            hi = int(offs[p + 1])
-            b0, b1 = int(b_first[p]), int(b_last[p])
-            for i in range(b0, b1):
-                if kb[i] > kp[i]:
-                    items.append((_BLOCK, runs[kp[i]:kb[i]]))
-                items.append(bitems[bp_list[i]])
-            if kh[p] > kt[p]:
-                items.append((_BLOCK, runs[kt[p]:kh[p]]))
-            if not (b1 > b0 and bitems[bp_list[b1 - 1]][0] == _K_HALT
-                    and bp_list[b1 - 1] == hi - 1):
-                items.append((_END,))
-            out.items[cid] = items
+        _finish_decode(out, pr, unit, lat, bitems, ev_tot, ev_cnt)
         return out
 
 
@@ -777,7 +851,17 @@ def run_stage(sim: Any, sp: Any) -> Optional[Tuple[float, Dict[str, float],
         ds = dec.decode_stage(sp.programs)
     except DecodeUnsupported:
         return None
+    return replay_stage(sim, sp, ds)
 
+
+def replay_stage(sim: Any, sp: Any,
+                 ds: _DecodedStage) -> Tuple[float, Dict[str, float],
+                                             Dict[str, float], int]:
+    """Replay one pre-decoded stage (shared by the numpy/JAX engines).
+
+    ``sim`` only needs ``.m`` and ``.max_cycles`` — the fleet evaluator
+    passes a lightweight shim instead of a full ``Simulator``.
+    """
     from .simulator import Deadlock, SimError     # late: avoid cycle
     m = sim.m
     max_cycles = sim.max_cycles

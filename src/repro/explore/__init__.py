@@ -21,9 +21,10 @@ Quickstart::
 """
 
 from ..core.machine import Calibration
-from . import cache, cli, engine, pareto, records, search, space
+from . import cache, cli, engine, fleet, pareto, records, search, space
 from .cache import ResultCache, cache_key, default_cache_dir
 from .engine import ExplorationEngine, evaluate_chip
+from .fleet import FleetEvaluator, canonical_chip
 from .pareto import (AXES, ParetoPoint, annotate, frontier_report,
                      pareto_frontier)
 from .records import FIDELITIES, EvalRecord, RecordStore
@@ -31,17 +32,21 @@ from .search import (SearchResult, by_cycles, by_edp, by_energy,
                      grid_search, hill_climb, random_search,
                      successive_halving)
 from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
-                    Dimension, default_space, mesh_space, mg_flit_space)
+                    Dimension, default_space, mesh_space, mg_flit_space,
+                    timing_space)
 
 __all__ = [
-    "cache", "cli", "engine", "pareto", "records", "search", "space",
+    "cache", "cli", "engine", "fleet", "pareto", "records", "search",
+    "space",
     "ResultCache", "cache_key", "default_cache_dir",
     "ExplorationEngine", "evaluate_chip", "Calibration",
+    "FleetEvaluator", "canonical_chip",
     "AXES", "ParetoPoint", "annotate", "frontier_report",
     "pareto_frontier",
     "FIDELITIES", "EvalRecord", "RecordStore",
     "SearchResult", "by_cycles", "by_edp", "by_energy", "grid_search",
     "hill_climb", "random_search", "successive_halving",
     "DesignPoint", "DesignSpace", "Dimension", "default_space",
-    "mesh_space", "mg_flit_space", "SWEEP_MG", "SWEEP_FLIT",
+    "mesh_space", "mg_flit_space", "timing_space",
+    "SWEEP_MG", "SWEEP_FLIT",
 ]

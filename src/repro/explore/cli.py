@@ -32,7 +32,8 @@ from .engine import ExplorationEngine
 from .pareto import frontier_report
 from .records import EvalRecord, RecordStore
 from .search import by_edp, successive_halving
-from .space import DesignSpace, default_space, mg_flit_space
+from .space import (DesignSpace, default_space, mg_flit_space,
+                    timing_space)
 
 __all__ = ["main"]
 
@@ -61,12 +62,13 @@ def _build_space(args: argparse.Namespace) -> DesignSpace:
         if s not in STRATEGIES:
             raise SystemExit(f"unknown strategy {s!r}; "
                              f"have {list(STRATEGIES)}")
-    if args.space == "default":
+    if args.space in ("default", "timing"):
         if args.mg is not None or args.flit is not None:
             raise SystemExit("--mg/--flit restrict the mg-flit grid "
                              "only; they cannot be combined with "
-                             "--space default (which sweeps its own "
-                             "MG/flit axes)")
+                             f"--space {args.space}")
+        if args.space == "timing":
+            return timing_space(strategies=strategies)
         return default_space(strategies=strategies)
     return mg_flit_space(_ints(args.mg or "4,8,16"),
                          _ints(args.flit or "8,16"),
@@ -89,7 +91,8 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
         cache=None if args.no_cache else (args.cache_root
                                           or default_cache_dir()),
         store=args.store, flow_cache=args.flow_cache,
-        calibration=getattr(args, "calibration", None), **kw)
+        calibration=getattr(args, "calibration", None),
+        engine=args.engine, **kw)
     print(f"sweeping {args.model}: {space.describe()}")
     if args.top_k:
         result, screened = successive_halving(
@@ -154,10 +157,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     sw.add_argument("--res", type=int, default=None,
                     help="input resolution for CNN workloads")
     sw.add_argument("--batch", type=int, default=4)
-    sw.add_argument("--space", choices=("mg-flit", "default"),
+    sw.add_argument("--space", choices=("mg-flit", "default", "timing"),
                     default="mg-flit",
                     help="mg-flit: Fig.6 grid; default: full 5-dim "
-                         "space")
+                         "space; timing: 64-point unit-latency grid "
+                         "sharing one compiled program (pairs with "
+                         "--engine jax)")
     sw.add_argument("--mg", default=None,
                     help="[mg-flit only] comma-separated MG sizes "
                          "(default 4,8,16)")
@@ -187,6 +192,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "pass-output cache (shared by pool workers)")
     sw.add_argument("--pool", type=int, default=0,
                     help="worker processes (0 = serial)")
+    sw.add_argument("--engine",
+                    choices=("auto", "scalar", "vector", "jax"),
+                    default="auto",
+                    help="perf-simulator engine for simulate-fidelity "
+                         "points; jax batches same-structure chips "
+                         "through one vmapped XLA program")
     sw.add_argument("--store", default=None,
                     help="append records to this JSONL file")
     sw.add_argument("--cache-root", default=None)

@@ -58,7 +58,8 @@ def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
                   params: Optional[CostParams] = None,
                   fidelity: str = "analytic",
                   calibration: Optional[Calibration] = None,
-                  system: Optional[Any] = None) -> Dict[str, Any]:
+                  system: Optional[Any] = None,
+                  engine: str = "auto") -> Dict[str, Any]:
     """Score one (graph, chip, strategy) at the given fidelity.
 
     Runs on the :mod:`repro.flow` pass pipeline, so a point promoted
@@ -78,7 +79,12 @@ def evaluate_chip(cg: CondensedGraph, chip: ChipConfig, strategy: str,
                                       fidelity=fidelity,
                                       calibration=calibration,
                                       system=system))
-    rep = art.evaluate()
+    # only the simulator backend takes an engine; cheap fidelities have
+    # no per-instruction execution path to select
+    kw = ({"engine": engine}
+          if engine != "auto" and fidelity == "simulate" and system is None
+          else {})
+    rep = art.evaluate(**kw)
     return {"cycles": rep.cycles, "energy": dict(rep.energy),
             "throughput_sps": rep.throughput_sps}
 
@@ -93,12 +99,14 @@ _WORKER: Dict[str, Any] = {}
 def _init_worker(model: str, workload_kw: Dict[str, Any],
                  params: CostParams,
                  calibration: Optional[Calibration] = None,
-                 flow_cache: Optional[str] = None) -> None:
+                 flow_cache: Optional[str] = None,
+                 engine: str = "auto") -> None:
     if flow_cache:
         os.environ[_FLOW_CACHE_ENV] = flow_cache
     _WORKER["cg"] = workloads.build(model, **workload_kw).condense()
     _WORKER["params"] = params
     _WORKER["calibration"] = calibration
+    _WORKER["engine"] = engine
 
 
 def _err_payload(e: Exception, wall_s: float = 0.0) -> Dict[str, Any]:
@@ -116,7 +124,8 @@ def _eval_worker(job: Tuple[DesignPoint, str]) -> Dict[str, Any]:
         out = evaluate_chip(_WORKER["cg"], point.chip(), point.strategy,
                             _WORKER["params"], fidelity,
                             _WORKER.get("calibration"),
-                            system=point.system())
+                            system=point.system(),
+                            engine=_WORKER.get("engine", "auto"))
     except Exception as e:        # noqa: BLE001 — point-local failure
         out = _err_payload(e)
     out["wall_s"] = time.perf_counter() - t0
@@ -215,12 +224,18 @@ class ExplorationEngine:
                  fidelity: str = "analytic",
                  calibration: Union[Calibration, str, None] = None,
                  flow_cache: Optional[str] = None,
+                 engine: str = "auto",
                  **workload_kw: Any) -> None:
         # validate eagerly: an unknown model raising inside a pool
         # worker's initializer would respawn workers forever
         if model not in workloads.WORKLOADS:
             raise KeyError(f"unknown workload {model!r}; "
                            f"have {sorted(workloads.WORKLOADS)}")
+        from ..core.simulator import ENGINES
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {engine!r}")
+        self.engine = engine
         self.model = model
         self.workload_kw = dict(workload_kw)
         self.params = params or CostParams(batch=4)
@@ -279,6 +294,14 @@ class ExplorationEngine:
             # only multi-chip points carry the kwarg, so every
             # pre-scale-out cache entry keeps its key
             extra["system"] = system.to_dict()
+        if self.engine == "jax" and fidelity == "simulate":
+            # fleet results use pinned-program semantics (compiled on
+            # the point's canonical chip — see explore.fleet), which
+            # can diverge from per-point compilation when a timing
+            # field steers the partitioner; key them separately so the
+            # two paths never share entries.  scalar/vector/auto are
+            # bit-identical per-point runs and keep the historical key.
+            extra["engine"] = "jax"
         return cache_key(self.model, point.chip(), point.strategy,
                          fidelity, self.params, **extra)
 
@@ -363,16 +386,38 @@ class ExplorationEngine:
         miss_idx = [i for i, r in enumerate(results) if r is None]
         jobs = [(points[i], fidelity) for i in miss_idx]
         if jobs:
-            if self.pool > 1 and len(jobs) > 1:
-                fresh = self._run_pool(jobs, fidelity)
-            else:
-                _WORKER["cg"] = self.cg       # built once per engine
-                _WORKER["params"] = self.params
-                _WORKER["calibration"] = self.calibration
-                if fidelity in _CHEAP:
-                    fresh = _eval_batch_worker(jobs)
+            fresh: List[Optional[Dict[str, Any]]] = [None] * len(jobs)
+            rest = list(range(len(jobs)))
+            if fidelity == "simulate" and self.engine == "jax":
+                # fleet path: single-chip misses batch into vmapped
+                # device calls — one compile + one decode per canonical
+                # chip group instead of a pipeline per point.  Mesh
+                # (system) points keep the per-point path below.
+                fleet_k = [k for k in rest
+                           if jobs[k][0].system() is None]
+                if fleet_k:
+                    outs = self._fleet().evaluate(
+                        [(jobs[k][0].chip(), jobs[k][0].strategy)
+                         for k in fleet_k])
+                    for k, out in zip(fleet_k, outs):
+                        fresh[k] = out
+                    taken = set(fleet_k)
+                    rest = [k for k in rest if k not in taken]
+            sub = [jobs[k] for k in rest]
+            if sub:
+                if self.pool > 1 and len(sub) > 1:
+                    got = self._run_pool(sub, fidelity)
                 else:
-                    fresh = [_eval_worker(j) for j in jobs]
+                    _WORKER["cg"] = self.cg   # built once per engine
+                    _WORKER["params"] = self.params
+                    _WORKER["calibration"] = self.calibration
+                    _WORKER["engine"] = self.engine
+                    if fidelity in _CHEAP:
+                        got = _eval_batch_worker(sub)
+                    else:
+                        got = [_eval_worker(j) for j in sub]
+                for k, out in zip(rest, got):
+                    fresh[k] = out
             for i, out in zip(miss_idx, fresh):
                 results[i] = out
                 # errors are deterministic for a given key but cheap to
@@ -381,6 +426,7 @@ class ExplorationEngine:
                         and "error" not in out:
                     self.cache.put(keys[i], out)
 
+        rec_engine = self.engine if fidelity == "simulate" else "auto"
         records = [
             EvalRecord(point=pt, model=self.model, fidelity=fidelity,
                        cycles=out["cycles"],
@@ -388,7 +434,8 @@ class ExplorationEngine:
                        energy=out["energy"], batch=self.params.batch,
                        cache_hit=hit[i],
                        wall_s=out.get("wall_s", 0.0),
-                       error=out.get("error"))
+                       error=out.get("error"),
+                       engine=rec_engine)
             for i, (pt, out) in enumerate(zip(points, results))
         ]
         if self.store is not None:
@@ -413,12 +460,13 @@ class ExplorationEngine:
             _WORKER["cg"] = self.cg
             _WORKER["params"] = self.params
             _WORKER["calibration"] = self.calibration
+            _WORKER["engine"] = self.engine
             init, initargs = None, ()
         except ValueError:
             ctx = mp.get_context("spawn")
             init = _init_worker
             initargs = (self.model, self.workload_kw, self.params,
-                        self.calibration, self.flow_cache)
+                        self.calibration, self.flow_cache, self.engine)
         n = min(self.pool, len(jobs))
         chunk = max(1, len(jobs) // (n * 4))
         with ctx.Pool(processes=n, initializer=init,
@@ -433,6 +481,14 @@ class ExplorationEngine:
                     out.extend(batch)
                 return out
             return pool.map(_eval_worker, jobs, chunksize=chunk)
+
+    def _fleet(self) -> Any:
+        fe = getattr(self, "_fleet_eval", None)
+        if fe is None:
+            from .fleet import FleetEvaluator
+            fe = self._fleet_eval = FleetEvaluator(self.cg,
+                                                   params=self.params)
+        return fe
 
     def cache_stats(self) -> Dict[str, int]:
         return dict(self.cache.stats) if self.cache is not None \

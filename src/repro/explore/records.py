@@ -41,6 +41,10 @@ class EvalRecord:
     cache_hit: bool = False
     wall_s: float = 0.0
     error: Optional[str] = None   # evaluation failed (infeasible point)
+    # perf-simulator execution path for simulate-fidelity rows
+    # ("auto" | "scalar" | "vector" | "jax"); cheap fidelities run no
+    # simulator and always record "auto"
+    engine: str = "auto"
 
     @property
     def ok(self) -> bool:
@@ -70,6 +74,7 @@ class EvalRecord:
             "throughput_sps": self.throughput_sps, "energy": self.energy,
             "batch": self.batch, "cache_hit": self.cache_hit,
             "wall_s": self.wall_s, "error": self.error,
+            "engine": self.engine,
         }
 
     @classmethod
@@ -81,7 +86,8 @@ class EvalRecord:
                    energy=dict(d["energy"]), batch=d.get("batch", 4),
                    cache_hit=d.get("cache_hit", False),
                    wall_s=d.get("wall_s", 0.0),
-                   error=d.get("error"))
+                   error=d.get("error"),
+                   engine=d.get("engine", "auto"))
 
     def row(self) -> Dict[str, Any]:
         """Flat dict in the legacy ``DsePoint.row()`` schema (+ extras)."""
@@ -104,6 +110,7 @@ class EvalRecord:
             "total_macros": self.point.total_macros,
             "cache_hit": self.cache_hit,
             "error": self.error,
+            "engine": self.engine,
         }
 
 

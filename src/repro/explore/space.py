@@ -27,7 +27,8 @@ from ..core.partition import STRATEGIES
 
 __all__ = [
     "DesignPoint", "Dimension", "DesignSpace", "default_space",
-    "mg_flit_space", "mesh_space", "SWEEP_MG", "SWEEP_FLIT",
+    "mg_flit_space", "mesh_space", "timing_space", "SWEEP_MG",
+    "SWEEP_FLIT",
 ]
 
 # The paper's Fig. 6 / Fig. 7 grid — the single source of truth shared
@@ -63,9 +64,16 @@ class DesignPoint:
     chips: int = 1
     link: str = "pcb"
     parallel: str = "pipeline"
+    # timing-only axes: none of these steer partitioning or codegen, so
+    # points differing only here share one canonical chip — the fleet
+    # evaluator (explore.fleet) compiles once and vmaps the batch
+    scalar_alu_latency: int = 1
+    vector_alu_latency: int = 1
+    weight_load_rows_per_cycle: int = 1
+    router_latency: int = 2
 
     def chip(self) -> ChipConfig:
-        return default_chip(
+        chip = default_chip(
             macros_per_group=self.macros_per_group,
             n_macro_groups=self.n_macro_groups,
             flit_bytes=self.flit_bytes,
@@ -76,6 +84,24 @@ class DesignPoint:
                   f"x{self.n_macro_groups}-f{self.flit_bytes}"
                   f"-l{self.local_mem_kb}"),
         )
+        if (self.scalar_alu_latency, self.vector_alu_latency,
+                self.weight_load_rows_per_cycle,
+                self.router_latency) == (1, 1, 1, 2):
+            return chip              # defaults: historical chip object
+        core = chip.core
+        return dataclasses.replace(
+            chip,
+            core=dataclasses.replace(
+                core,
+                scalar=dataclasses.replace(
+                    core.scalar, alu_latency=self.scalar_alu_latency),
+                vector=dataclasses.replace(
+                    core.vector, alu_latency=self.vector_alu_latency),
+                cim=dataclasses.replace(
+                    core.cim, weight_load_rows_per_cycle=(
+                        self.weight_load_rows_per_cycle))),
+            noc=dataclasses.replace(chip.noc,
+                                    router_latency=self.router_latency))
 
     def system(self) -> Optional[Any]:
         """``SystemConfig`` mesh for multi-chip points, else ``None``."""
@@ -273,6 +299,26 @@ def mesh_space(chips: Sequence[int] = (1, 2, 4),
         Dimension("chips", tuple(chips)),
         Dimension("link", tuple(links)),
         Dimension("parallel", tuple(parallel)),
+    ])
+
+
+def timing_space(scalar_alu: Sequence[int] = (1, 2),
+                 vector_alu: Sequence[int] = (1, 2, 3, 4),
+                 wl_rate: Sequence[int] = (1, 2, 4, 8),
+                 router: Sequence[int] = (1, 2),
+                 strategies: Sequence[str] = ("dp",)) -> DesignSpace:
+    """Timing-only sweep on a fixed structure (64 points by default).
+
+    Every point shares one canonical chip, so the jax fleet evaluator
+    (``ExplorationEngine(engine="jax")``) compiles the workload once and
+    evaluates the whole grid in one vmapped decode per stage.
+    """
+    return DesignSpace([
+        Dimension("scalar_alu_latency", tuple(scalar_alu)),
+        Dimension("vector_alu_latency", tuple(vector_alu)),
+        Dimension("weight_load_rows_per_cycle", tuple(wl_rate)),
+        Dimension("router_latency", tuple(router)),
+        Dimension("strategy", tuple(strategies)),
     ])
 
 

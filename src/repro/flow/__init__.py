@@ -34,7 +34,7 @@ the same internals.
 
 from ..core.machine import Calibration, MachineModel, machine_for
 from .backends import (BACKENDS, AnalyticBackend, Backend, EvalReport,
-                       SimulatorBackend, TraceBackend,
+                       PallasFuncBackend, SimulatorBackend, TraceBackend,
                        backend_for_fidelity, register_backend,
                        resolve_backend)
 from .calibrate import (CalibrationReport, CalibrationRow, calibrate,
@@ -55,7 +55,8 @@ __all__ = [
     "register_pass", "get_pass", "partition_pass_name",
     "CondensePass", "PartitionPass", "CodegenPass",
     "Backend", "EvalReport", "AnalyticBackend", "TraceBackend",
-    "SimulatorBackend", "BACKENDS", "register_backend",
+    "SimulatorBackend", "PallasFuncBackend", "BACKENDS",
+    "register_backend",
     "resolve_backend", "backend_for_fidelity",
     "calibrate", "CalibrationReport", "CalibrationRow",
     "calibration_dir", "save_calibration", "load_calibration",

@@ -36,8 +36,9 @@ from ..core.simulator import ENGINES, SimReport, Simulator
 from ..core.trace import TraceEngine, TraceReport
 
 __all__ = ["EvalReport", "Backend", "AnalyticBackend", "TraceBackend",
-           "SimulatorBackend", "BACKENDS", "resolve_backend",
-           "register_backend", "backend_for_fidelity"]
+           "SimulatorBackend", "PallasFuncBackend", "BACKENDS",
+           "resolve_backend", "register_backend",
+           "backend_for_fidelity"]
 
 
 @dataclass
@@ -52,6 +53,7 @@ class EvalReport:
     wall_s: float = 0.0
     sim: Optional[SimReport] = None     # simulator backends only
     trace: Optional[TraceReport] = None  # trace backend only
+    outputs: Optional[Dict[int, np.ndarray]] = None  # func oracles only
 
     @property
     def energy_total(self) -> float:
@@ -178,6 +180,76 @@ class SimulatorBackend(Backend):
             batch=batch, wall_s=time.perf_counter() - t0, sim=rep)
 
 
+class PallasFuncBackend(Backend):
+    """Functional oracle with the MVMs on the Pallas bit-serial kernel.
+
+    Forward-passes the artifact's condensed graph through
+    :func:`repro.core.ref.run_reference`, executing every INT8 matmul
+    on :func:`repro.kernels.ops.cim_mvm` — the bit-serial bit-plane
+    decomposition a digital CIM macro performs, as a Pallas kernel
+    (interpret mode on CPU, native on TPU; see
+    ``REPRO_PALLAS_INTERPRET``).  With ``check=True`` (default) the
+    pure-numpy oracle runs alongside and every group output is asserted
+    bit-equal, so one evaluation validates the kernel's integer
+    semantics at full-model scale — feasible where the per-instruction
+    functional ISS is not (e.g. resnet18 at 224x224).
+
+    ``weights``/``biases``/``inputs``/``quant`` default to
+    :func:`repro.core.ref.random_init` + ``auto_quant`` draws, making
+    ``artifact.evaluate("func:pallas")`` self-contained.
+    """
+
+    name = "func:pallas"
+    requires_model = False
+
+    def evaluate(self, artifact: Any, weights: Any = None,
+                 biases: Any = None, inputs: Any = None,
+                 quant: Any = None, check: bool = True,
+                 seed: int = 0, **kw: Any) -> EvalReport:
+        if kw:
+            raise TypeError(f"func:pallas backend takes weights/biases/"
+                            f"inputs/quant/check/seed, got {sorted(kw)}")
+        from ..core import ref
+        t0 = time.perf_counter()
+        cg = artifact.cg
+        if weights is None:
+            if biases is not None or inputs is not None:
+                raise TypeError("pass weights+biases+inputs together "
+                                "or none of them")
+            batch = artifact.options.resolved_batch()
+            weights, biases, inputs = ref.random_init(cg, batch=batch,
+                                                      seed=seed)
+        else:
+            batch = int(inputs.shape[0])
+        if quant is None:
+            quant = ref.auto_quant(cg, weights, biases, inputs)
+        outs = ref.run_reference(cg, weights, biases, quant, inputs,
+                                 matmul=_pallas_matmul)
+        if check:
+            want = ref.run_reference(cg, weights, biases, quant, inputs)
+            for gid, arr in want.items():
+                got = outs[gid]
+                if got.shape != arr.shape or not np.array_equal(got, arr):
+                    raise AssertionError(
+                        f"func:pallas mismatch on group {gid}: pallas "
+                        f"oracle != numpy oracle "
+                        f"(shapes {got.shape} vs {arr.shape})")
+        # a functional-validation pass carries no timing claim
+        return EvalReport(backend=self.name, cycles=0.0,
+                          energy={"total": 0.0}, throughput_sps=0.0,
+                          batch=batch,
+                          wall_s=time.perf_counter() - t0, outputs=outs)
+
+
+def _pallas_matmul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """INT32-valued (int8-ranged) ``a @ b`` on the bit-serial kernel."""
+    import jax.numpy as jnp
+
+    from ..kernels.ops import cim_mvm
+    return np.asarray(cim_mvm(jnp.asarray(a, jnp.int8),
+                              jnp.asarray(b, jnp.int8)))
+
+
 BACKENDS: Dict[str, Backend] = {}
 
 
@@ -194,6 +266,7 @@ register_backend(AnalyticBackend())
 register_backend(TraceBackend())
 register_backend(SimulatorBackend("perf"), "perf")
 register_backend(SimulatorBackend("func"))
+register_backend(PallasFuncBackend())
 
 
 def resolve_backend(backend: Union[str, Backend, None],

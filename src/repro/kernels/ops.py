@@ -15,6 +15,7 @@ on TPU it compiles natively.  ``interpret=None`` auto-detects.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -25,8 +26,22 @@ from .ref import mvm_ref
 
 __all__ = ["cim_mvm", "int8_matmul", "quantized_linear", "pad_to"]
 
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
+
+@functools.lru_cache(maxsize=None)
 def _auto_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    ``REPRO_PALLAS_INTERPRET=0/1`` overrides the backend probe (e.g. to
+    force interpret mode on a TPU host, or assert native compilation).
+    Memoized — ``jax.default_backend()`` initializes the platform
+    backend, which is milliseconds per call; tests monkeypatching the
+    env var must ``_auto_interpret.cache_clear()``.
+    """
+    env = os.environ.get(_INTERPRET_ENV)
+    if env is not None and env.strip() != "":
+        return env.strip().lower() not in ("0", "false", "no", "off")
     return jax.default_backend() != "tpu"
 
 

@@ -46,6 +46,27 @@ def chip():
     return default_chip()
 
 
+def _timed(fn, reps=2):
+    """(result, best wall) — min over ``reps`` runs, gc parked.
+
+    The walls here feed a ratio assertion on measurements tens of ms
+    long; a gen-2 garbage collection landing inside one of them (the
+    fixture compiles whole artifacts right before timing, so the heap
+    is at its deepest) skews the ratio by several x.  Collect up front
+    and keep the best of two runs so the assertion sees engine speed,
+    not allocator state.
+    """
+    import gc
+    gc.collect()
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
 @pytest.fixture(scope="module")
 def golden(chip):
     """{(model, strategy): {fidelity: cycles, *_wall_s}} on batch=4."""
@@ -60,14 +81,12 @@ def golden(chip):
                                workload_kw=kw or None))
             row = {}
             row["analytic"] = art.evaluate("analytic").cycles
-            t0 = time.perf_counter()
-            tr = art.evaluate("trace")
-            row["trace_wall_s"] = time.perf_counter() - t0
+            tr, row["trace_wall_s"] = _timed(
+                lambda: art.evaluate("trace"))
             row["trace"] = tr.cycles
             art.ensure_model()          # keep codegen out of the timing
-            t0 = time.perf_counter()
-            sim = art.evaluate("simulate")
-            row["perf_wall_s"] = time.perf_counter() - t0
+            sim, row["perf_wall_s"] = _timed(
+                lambda: art.evaluate("simulate"))
             row["perf"] = sim.cycles
             out[(model, strategy)] = row
     return out
