@@ -1,0 +1,300 @@
+"""Fault-injection benchmark: degradation, failover and shedding golden.
+
+Pins the three robustness surfaces of ``repro.faults`` to committed
+numbers (``BENCH_faults.json`` at the repo root):
+
+* **fault-free identity** — a ``FaultModel(rate=0)`` fault set leaves
+  the numpy oracle bit-unchanged (asserted inline) and the clean
+  outputs hash to a recorded checksum, so any silent change to the
+  fault-free path fails the smoke;
+* **fixed-seed degradation** — the tiny_cnn stuck-at degradation curve
+  (BER / top-1 agreement per fault rate) plus the closed-form residual
+  rates and machine-model overheads of each protection level;
+* **mesh failover** — analytic throughput of a 2x2 pipeline mesh
+  healthy vs with one failed chip (the re-planned, degraded mode);
+* **serving degradation** — a deliberately over-capacity Poisson
+  burst through ``repro.serve`` with deadlines + load shedding:
+  nonzero shed/timeout/retry counters and goodput < throughput.
+
+Everything derives from seeded draws and deterministic cost models —
+no wall clock — so ``--smoke`` fails on ANY numeric drift (regenerate
+with ``--update-golden`` and commit the diff when intentional).
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--smoke]
+        [--update-golden] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import warnings
+from typing import Dict, List, Optional
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_PATH = os.path.join(_ROOT, "BENCH_faults.json")
+
+WORKLOAD_KW = dict(res=8, c=8)
+BATCH = 2
+SEED = 0
+RATES = (0.0, 1e-3, 5e-3, 2e-2)
+RAW_RATE = 1e-3                      # rate the mitigation table assumes
+
+SERVE_RATE = 300000.0                # ~3x the analytic prefill capacity
+SERVE_REQUESTS = 200
+SERVE_SEED = 1
+SERVE_KW = dict(deadline_s=0.002, max_queue=4, max_retries=2,
+                retry_backoff_s=0.0005)
+
+_MESH_KEYS = ("cycles", "throughput_sps", "n_chips", "n_failed_chips")
+_SERVE_KEYS = ("requests", "tokens", "shed_requests",
+               "timeout_requests", "retries", "goodput_tok_s",
+               "throughput_tok_s")
+
+
+def _clean_identity() -> Dict:
+    """Assert rate-0 leaves the oracle bit-unchanged; hash the outputs."""
+    import numpy as np
+
+    from repro.core import ref, workloads
+    from repro.core.arch import default_chip
+    from repro.faults import FaultModel, resolve_faults
+
+    cg = workloads.build("tiny_cnn", **WORKLOAD_KW).condense()
+    weights, biases, inputs = ref.random_init(cg, batch=BATCH, seed=SEED)
+    quant = ref.auto_quant(cg, weights, biases, inputs)
+    clean = ref.run_reference(cg, weights, biases, quant, inputs)
+    fs = resolve_faults(weights, default_chip(), FaultModel(rate=0.0))
+    gated = ref.run_reference(cg, weights, biases, quant, inputs,
+                              faults=fs)
+    for gid in clean:
+        if not np.array_equal(clean[gid], gated[gid]):
+            raise AssertionError(
+                f"FaultModel(rate=0) changed group {gid} — the "
+                f"fault-free path is no longer an exact no-op")
+    h = hashlib.sha256()
+    for gid in sorted(clean):
+        h.update(np.ascontiguousarray(clean[gid]).tobytes())
+    return {"n_stuck": fs.n_stuck, "output_sha256": h.hexdigest()}
+
+
+def _degradation() -> List[Dict]:
+    from repro.core import workloads
+    from repro.core.arch import default_chip
+    from repro.faults import degradation_curve
+
+    cg = workloads.build("tiny_cnn", **WORKLOAD_KW).condense()
+    return degradation_curve(cg, default_chip(), RATES, batch=BATCH,
+                             seed=SEED)
+
+
+def _mitigation() -> Dict[str, Dict]:
+    from repro.core.arch import ProtectionConfig, default_chip
+    from repro.core.machine import machine_for
+    from repro.faults import residual_rate
+
+    out: Dict[str, Dict] = {}
+    for name, prot in (
+            ("none", ProtectionConfig()),
+            ("ecc", ProtectionConfig(ecc=True)),
+            ("spare4", ProtectionConfig(spare_rows=4)),
+            ("tmr", ProtectionConfig(tmr=True)),
+            ("full", ProtectionConfig(ecc=True, spare_rows=4,
+                                      tmr=True))):
+        chip = default_chip(protection=prot)
+        m = machine_for(chip)
+        out[name] = {
+            "residual_rate": residual_rate(RAW_RATE, prot,
+                                           chip.core.cim.macro),
+            "weight_load_factor": m.weight_load_factor,
+            "area_factor": m.protection_area_factor,
+            "mvm_fill_beats": m.mvm_fill_beats,
+        }
+    return out
+
+
+def _mesh_failover() -> Dict[str, Dict]:
+    from repro import flow
+    from repro.core.arch import default_chip
+    from repro.flow import CompileOptions
+    from repro.system import SystemConfig
+
+    out: Dict[str, Dict] = {}
+    for name, sysc in (
+            ("healthy", SystemConfig.mesh(4)),
+            # chip 1 is on the healthy plan's route (the plan uses 3
+            # of the 4 chips), so its loss forces a genuine re-plan
+            ("one_chip_down",
+             SystemConfig.mesh(4).degrade(failed_chips=(1,)))):
+        rep = flow.compile("tiny_cnn", default_chip(), CompileOptions(
+            fidelity="analytic", batch=BATCH, workload_kw=WORKLOAD_KW,
+            system=sysc)).evaluate()
+        out[name] = {"cycles": rep.cycles,
+                     "throughput_sps": rep.throughput_sps,
+                     "n_chips": rep.n_chips,
+                     "n_failed_chips": rep.n_failed_chips}
+    return out
+
+
+def _serving_overload() -> Dict:
+    from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
+                             make_policy, poisson_trace)
+
+    table = StepCostTable(ServeModelCfg(), fidelity="analytic")
+    trace = poisson_trace(SERVE_RATE, SERVE_REQUESTS, seed=SERVE_SEED)
+    sim = ServeSim(table, make_policy("continuous", 8), **SERVE_KW)
+    with warnings.catch_warnings():
+        # the overload is the point; the saturation warning is for
+        # interactive users, not the golden
+        warnings.simplefilter("ignore", RuntimeWarning)
+        m = sim.run(trace)
+    return {k: m[k] for k in _SERVE_KEYS}
+
+
+def bench_doc() -> Dict:
+    return {
+        "schema": 1,
+        "chip": "default",
+        "workload": {"model": "tiny_cnn", **WORKLOAD_KW,
+                     "batch": BATCH, "seed": SEED},
+        "clean_identity": _clean_identity(),
+        "degradation": _degradation(),
+        "mitigation": {"raw_rate": RAW_RATE, "levels": _mitigation()},
+        "mesh_failover": _mesh_failover(),
+        "serving_overload": {
+            "rate": SERVE_RATE, "requests": SERVE_REQUESTS,
+            "seed": SERVE_SEED, **SERVE_KW,
+            "metrics": _serving_overload()},
+    }
+
+
+def report(doc: Dict) -> str:
+    out = ["== fault-injection bench (tiny_cnn, default chip) =="]
+    out.append("rate        n_stuck   BER          top-1 agree")
+    for row in doc["degradation"]:
+        out.append(f"{row['rate']:<10.4g}  {row['n_stuck']:<8.0f}  "
+                   f"{row['ber']:<11.4g}  {row['top1_agreement']:.3f}")
+    mf = doc["mesh_failover"]
+    out.append(
+        f"mesh 2x2: healthy {mf['healthy']['throughput_sps']:.1f} sps"
+        f" -> 1 chip down "
+        f"{mf['one_chip_down']['throughput_sps']:.1f} sps")
+    sv = doc["serving_overload"]["metrics"]
+    out.append(
+        f"serving overload: shed={sv['shed_requests']} "
+        f"timeout={sv['timeout_requests']} retries={sv['retries']} "
+        f"goodput={sv['goodput_tok_s']:.0f}/"
+        f"{sv['throughput_tok_s']:.0f} tok/s")
+    return "\n".join(out)
+
+
+def _round(x) -> float:
+    return round(float(x), 9)
+
+
+def smoke_drift(doc: Dict, golden: Dict) -> List[str]:
+    """Failures vs the committed golden (empty = clean)."""
+    drift: List[str] = []
+    if doc["clean_identity"] != golden["clean_identity"]:
+        drift.append(f"clean_identity: {golden['clean_identity']} -> "
+                     f"{doc['clean_identity']}")
+    rows, grows = doc["degradation"], golden["degradation"]
+    if len(rows) != len(grows):
+        drift.append(f"degradation rows: {len(grows)} -> {len(rows)}")
+    for row, grow in zip(rows, grows):
+        for k in ("rate", "n_stuck", "ber", "top1_agreement"):
+            if _round(row[k]) != _round(grow[k]):
+                drift.append(f"degradation[{row['rate']}].{k}: "
+                             f"{grow[k]} -> {row[k]}")
+    for name, g in golden["mitigation"]["levels"].items():
+        m = doc["mitigation"]["levels"].get(name)
+        if m is None:
+            drift.append(f"mitigation.{name}: missing")
+            continue
+        for k in g:
+            if _round(m[k]) != _round(g[k]):
+                drift.append(f"mitigation.{name}.{k}: {g[k]} -> {m[k]}")
+    for name in ("healthy", "one_chip_down"):
+        m, g = doc["mesh_failover"][name], golden["mesh_failover"][name]
+        for k in _MESH_KEYS:
+            if _round(m[k]) != _round(g[k]):
+                drift.append(f"mesh.{name}.{k}: {g[k]} -> {m[k]}")
+    sv = doc["serving_overload"]["metrics"]
+    gv = golden["serving_overload"]["metrics"]
+    for k in _SERVE_KEYS:
+        if _round(sv[k]) != _round(gv[k]):
+            drift.append(f"serving.{k}: {gv[k]} -> {sv[k]}")
+
+    # invariants, independent of the golden
+    d0 = doc["degradation"][0]
+    if d0["rate"] != 0.0 or d0["ber"] != 0.0 \
+            or d0["top1_agreement"] != 1.0 or d0["n_stuck"] != 0:
+        drift.append(f"rate-0 row is not a clean no-op: {d0}")
+    stuck = [r["n_stuck"] for r in doc["degradation"]]
+    if stuck != sorted(stuck):
+        drift.append(f"n_stuck not monotone in rate: {stuck}")
+    hm = doc["mesh_failover"]
+    if hm["one_chip_down"]["throughput_sps"] >= \
+            hm["healthy"]["throughput_sps"]:
+        drift.append("degraded mesh throughput did not drop")
+    if sv["shed_requests"] <= 0 or sv["timeout_requests"] <= 0:
+        drift.append(f"overload scenario shed nothing: {sv}")
+    if sv["goodput_tok_s"] >= sv["throughput_tok_s"]:
+        drift.append("goodput did not fall below throughput under "
+                     "overload")
+    return drift
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate against the committed golden (CI job)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help=f"rewrite {GOLDEN_PATH}")
+    ap.add_argument("--json", default="results/bench_faults.json",
+                    help="also write the measured doc here "
+                         "('' to skip)")
+    args = ap.parse_args(argv)
+
+    doc = bench_doc()
+    print(report(doc))
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.update_golden:
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"golden updated: {GOLDEN_PATH}")
+        return 0
+    if args.smoke:
+        try:
+            with open(GOLDEN_PATH) as f:
+                golden = json.load(f)
+        except FileNotFoundError:
+            print(f"golden {GOLDEN_PATH} missing "
+                  f"(generate with --update-golden)")
+            return 1
+        drift = smoke_drift(doc, golden)
+        if drift:
+            print("FAULT BENCH DRIFT vs committed golden:")
+            for d in drift:
+                print(f"  {d}")
+            print("if the fault-model change is intentional, regenerate "
+                  "with `python -m benchmarks.bench_faults "
+                  "--update-golden` and commit the diff")
+            return 1
+        g = golden["degradation"][-1]
+        print(f"golden: clean (rate {g['rate']:g} -> BER "
+              f"{g['ber']:.4g}, top-1 {g['top1_agreement']:.3f}; "
+              f"degraded-mesh and shedding numbers pinned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

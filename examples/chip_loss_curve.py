@@ -1,0 +1,76 @@
+"""Chip-loss degradation curve on a mesh-of-chips system.
+
+Compiles one workload onto an N-chip mesh, then knocks chips out one
+at a time (``SystemConfig.degrade(failed_chips=...)``) and lets the
+system partitioner re-plan on whatever survives.  The printed curve —
+throughput vs failed-chip count, normalized to the healthy mesh — is
+the graceful-degradation story: work is conserved (the re-plan covers
+every layer), only the throughput and hop counts move.  On cheap links
+the curve is flat-then-cliff — re-routing around a dead chip costs a
+few hops' worth of cycles until the survivors no longer have the gmem
+to hold the model at all, which the script reports as the final row.
+
+    PYTHONPATH=src python examples/chip_loss_curve.py
+    PYTHONPATH=src python examples/chip_loss_curve.py transformer \
+        --chips 8 --fidelity trace
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import flow
+from repro.core.arch import default_chip
+from repro.core.partition import InfeasibleModel
+from repro.flow import CompileOptions
+from repro.system import SystemConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("model", nargs="?", default="transformer")
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--fidelity", default="analytic",
+                    choices=("analytic", "trace"))
+    args = ap.parse_args(argv)
+
+    kw = {"res": 8, "c": 8} if args.model == "tiny_cnn" else None
+    chip = default_chip()
+    print(f"model={args.model}  mesh={args.chips} chips  "
+          f"fidelity={args.fidelity}\n")
+    hdr = (f"{'failed':>6} {'alive':>6} {'used':>5} {'cycles':>12} "
+           f"{'samples/s':>10} {'vs healthy':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+
+    base_sps = None
+    # fail chips starting at chip 1 — the low-index chips are the ones
+    # the healthy plan occupies, so each loss forces a real re-plan
+    # onto higher-index survivors with longer routes (chip 0, the
+    # gmem-facing entry chip, stays alive)
+    for n_fail in range(args.chips):
+        failed = tuple(range(1, 1 + n_fail))
+        sysc = SystemConfig.mesh(args.chips)
+        if failed:
+            sysc = sysc.degrade(failed_chips=failed)
+        try:
+            rep = flow.compile(args.model, chip, CompileOptions(
+                fidelity=args.fidelity, batch=args.batch,
+                workload_kw=kw, system=sysc)).evaluate()
+        except InfeasibleModel as e:
+            print(f"{n_fail:>6d} {args.chips - n_fail:>6d}   "
+                  f"-- too few chips left: {e}")
+            break
+        if base_sps is None:
+            base_sps = rep.throughput_sps
+        print(f"{n_fail:>6d} {args.chips - n_fail:>6d} "
+              f"{rep.n_chips:>5d} {rep.cycles:>12.1f} "
+              f"{rep.throughput_sps:>10.1f} "
+              f"{rep.throughput_sps / base_sps:>9.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 __all__ = [
     "MacroConfig",
+    "ProtectionConfig",
     "CimUnitConfig",
     "VectorUnitConfig",
     "ScalarUnitConfig",
@@ -123,6 +124,40 @@ class MacroConfig:
 
 
 @dataclass(frozen=True)
+class ProtectionConfig:
+    """CIM-array fault-mitigation hardware.
+
+    Three orthogonal mechanisms, each a classic CIM reliability knob:
+
+    * ``ecc`` — SECDED across the weight storage (8 check bits per 64
+      data bits): +12.5% stored weights and one extra decode stage in
+      the MVM output path.
+    * ``spare_rows`` — redundant macro rows with remap logic: storage
+      and load time grow by ``spare_rows / macro.rows``.
+    * ``tmr`` — triple modular redundancy on arrays + datapath: 3x
+      storage, load time, compute energy and area, plus one voter
+      stage of MVM latency.
+
+    The cycle/energy/area overheads are priced centrally by
+    :class:`repro.core.machine.MachineModel`; the *effectiveness*
+    (residual fault rate) is modeled by
+    :func:`repro.faults.residual_rate`.  All defaults off — a default
+    chip is bit-identical to one predating this config.
+    """
+
+    ecc: bool = False
+    spare_rows: int = 0
+    tmr: bool = False
+
+    def __post_init__(self) -> None:
+        _require(self.spare_rows >= 0, "spare_rows must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        return self.ecc or self.spare_rows > 0 or self.tmr
+
+
+@dataclass(frozen=True)
 class CimUnitConfig:
     """Core-level CIM compute unit: a set of macro groups."""
 
@@ -132,10 +167,14 @@ class CimUnitConfig:
     # Cycles to load one macro row of weights from local memory
     # (row-parallel write ports are expensive; one row per cycle is typical).
     weight_load_rows_per_cycle: int = 1
+    # Fault-mitigation hardware (defaults: all off = zero overhead).
+    protection: ProtectionConfig = field(default_factory=ProtectionConfig)
 
     def __post_init__(self) -> None:
         _require(self.n_macro_groups > 0, "need at least one macro group")
         _require(self.macros_per_group > 0, "need at least one macro per MG")
+        _require(self.protection.spare_rows < self.macro.rows,
+                 "spare_rows must be smaller than macro rows")
 
     @property
     def group_n_out(self) -> int:
@@ -366,16 +405,17 @@ def default_chip(**overrides: Any) -> ChipConfig:
 
     Convenience overrides understood beyond plain ChipConfig fields:
     ``macros_per_group``, ``n_macro_groups``, ``flit_bytes``,
-    ``local_mem_kb``.
+    ``local_mem_kb``, ``protection``.
     """
     macro = MacroConfig()
     mg = overrides.pop("macros_per_group", 8)
     n_mg = overrides.pop("n_macro_groups", 16)
     flit = overrides.pop("flit_bytes", 8)
     lmem_kb = overrides.pop("local_mem_kb", 512)
+    prot = overrides.pop("protection", ProtectionConfig())
     core = CoreConfig(
         cim=CimUnitConfig(n_macro_groups=n_mg, macros_per_group=mg,
-                          macro=macro),
+                          macro=macro, protection=prot),
         local_mem=LocalMemConfig(size_bytes=lmem_kb * 1024),
     )
     noc = NocConfig(flit_bytes=flit)
@@ -400,6 +440,7 @@ def _build(cls, data: Dict[str, Any]):
 
 _NESTED = {
     "macro": MacroConfig,
+    "protection": ProtectionConfig,
     "cim": CimUnitConfig,
     "vector": VectorUnitConfig,
     "scalar": ScalarUnitConfig,

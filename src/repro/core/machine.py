@@ -219,8 +219,14 @@ class MachineModel:
 
     @property
     def mvm_fill_beats(self) -> int:
-        """Adder-tree fill latency paid once per MVM burst."""
-        return self.chip.core.cim.macro.adder_tree_depth
+        """Adder-tree fill latency paid once per MVM burst.
+
+        Protection hardware adds pipeline stages to the output path:
+        one ECC decode stage and one TMR voter stage (zero when off).
+        """
+        p = self.protection
+        return (self.chip.core.cim.macro.adder_tree_depth
+                + int(p.ecc) + int(p.tmr))
 
     @property
     def mvm_pass_beats(self) -> int:
@@ -233,7 +239,7 @@ class MachineModel:
 
     def weight_load_cycles(self, rows: int) -> float:
         """CIM_LOAD of ``rows`` macro rows from local memory."""
-        return rows / self.chip.core.cim.weight_load_rows_per_cycle
+        return rows / self.effective_weight_load_rows_per_cycle
 
     def group_load_cycles(self) -> float:
         """(Re)load of one full macro group."""
@@ -242,6 +248,54 @@ class MachineModel:
     @property
     def macros_per_group(self) -> int:
         return self.chip.core.cim.macros_per_group
+
+    # ------------------------------------------------------------------
+    # Fault-mitigation hardware (ECC / row sparing / TMR) overheads
+    # ------------------------------------------------------------------
+
+    @property
+    def protection(self):
+        """The chip's :class:`~repro.core.arch.ProtectionConfig`."""
+        return self.chip.core.cim.protection
+
+    @property
+    def weight_storage_overhead(self) -> float:
+        """Stored-bit inflation of the weight arrays: SECDED check
+        bits (+12.5%) and spare rows (+``spare/rows``).  1.0 when
+        protection is off."""
+        p = self.protection
+        macro = self.chip.core.cim.macro
+        f = 1.0
+        if p.ecc:
+            f *= 1.125
+        if p.spare_rows:
+            f *= 1.0 + p.spare_rows / macro.rows
+        return f
+
+    @property
+    def cim_compute_redundancy(self) -> float:
+        """Physical MVM passes per logical pass (3.0 under TMR)."""
+        return 3.0 if self.protection.tmr else 1.0
+
+    @property
+    def weight_load_factor(self) -> float:
+        """CIM_LOAD time/bytes inflation: every stored copy and check
+        bit must be written (storage overhead x TMR redundancy)."""
+        return self.weight_storage_overhead * self.cim_compute_redundancy
+
+    @property
+    def protection_area_factor(self) -> float:
+        """First-order CIM-unit area inflation from protection
+        hardware — the area axis of a protection DSE sweep."""
+        return self.weight_storage_overhead * self.cim_compute_redundancy
+
+    @property
+    def effective_weight_load_rows_per_cycle(self) -> float:
+        """Row-write throughput after protection overhead.  Written as
+        one shared divisor so the scalar, array-batched and JAX-fleet
+        paths stay bit-identical."""
+        return (self.chip.core.cim.weight_load_rows_per_cycle
+                / self.weight_load_factor)
 
     # ------------------------------------------------------------------
     # Vector unit
@@ -292,7 +346,7 @@ class MachineModel:
     def weight_load_cycles_array(self, rows: "Any") -> "Any":
         """Batched :meth:`weight_load_cycles` over a ``rows`` array."""
         rows = np.asarray(rows, dtype=np.float64)
-        return rows / self.chip.core.cim.weight_load_rows_per_cycle
+        return rows / self.effective_weight_load_rows_per_cycle
 
     def send_issue_cycles_array(self, nbytes: "Any") -> "Any":
         """Batched :meth:`send_issue_cycles` over a byte-count array."""
@@ -466,7 +520,7 @@ class MachineModel:
             "scalar_alu_cycles": float(self.scalar_alu_cycles),
             "scalar_ldst_cycles": float(self.scalar_ldst_cycles),
             "weight_load_rows_per_cycle": float(
-                self.chip.core.cim.weight_load_rows_per_cycle),
+                self.effective_weight_load_rows_per_cycle),
             "link_bytes_per_cycle": float(self.link_bytes_per_cycle),
         }
 
@@ -475,7 +529,19 @@ class MachineModel:
     # ------------------------------------------------------------------
 
     def price_events(self, events: Mapping[str, float]) -> Dict[str, float]:
-        """Event ledger -> {category: nJ} breakdown (+ ``total``)."""
+        """Event ledger -> {category: nJ} breakdown (+ ``total``).
+
+        Protection hardware prices in here: TMR triples the physical
+        macro passes behind each logical one, and every stored copy /
+        check bit inflates the weight-load traffic.  With protection
+        off the ledger passes through untouched.
+        """
+        if self.protection.enabled:
+            events = dict(events)
+            if "cim_macro_passes" in events:
+                events["cim_macro_passes"] *= self.cim_compute_redundancy
+            if "cim_weight_load_bytes" in events:
+                events["cim_weight_load_bytes"] *= self.weight_load_factor
         return energy_breakdown(events, self.energy_table)
 
     # ------------------------------------------------------------------

@@ -25,7 +25,7 @@ images (`conv_weight_matrix`, `dwconv_weight_matrix`).
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -114,7 +114,8 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
                   quant: Dict[int, QuantParams],
                   inputs: np.ndarray,
                   return_acc: bool = False,
-                  matmul: Optional[MatmulFn] = None
+                  matmul: Optional[MatmulFn] = None,
+                  faults: Optional[Any] = None
                   ) -> Dict[int, np.ndarray]:
     """Forward-pass every sample; returns {gid: (batch, ...) int8 maps}
     (conv groups: (B, ho', wo', N) post-fusion; vector groups: (B, N)).
@@ -122,6 +123,14 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
     ``matmul`` overrides the accumulator contraction
     ``(M, K) int32 x (K, N) int32 -> (M, N) int32`` (operand *values*
     always fit int8); the default is the numpy ``@``.
+
+    ``faults`` is an optional :class:`repro.faults.FaultSet`: static
+    weight matrices are stuck-at-corrupted before the contraction and
+    the int32 accumulator takes deterministic per-``(group, sample)``
+    transient flips after it.  ``None`` (and an empty set) leave the
+    oracle bit-exactly unchanged.  Dynamic-weight (attention) matmuls
+    build their matrix from activations at run time and carry no
+    stored-weight faults.
     """
     mm: MatmulFn = matmul if matmul is not None else (
         lambda a, b: a @ b)
@@ -154,7 +163,10 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
                     bool(anchor_op.attrs.get("transpose_weights"))
                 ).astype(np.int32)
             else:
-                W = weights[g.idx].astype(np.int32)
+                W = weights[g.idx]
+                if faults is not None:
+                    W = faults.corrupt_weight_matrix(g.idx, W)
+                W = W.astype(np.int32)
             if spec is not None:
                 k, stride, pad, dw = spec
                 patches = im2col(x, k, k, stride, pad, dw).astype(np.int32)
@@ -164,6 +176,8 @@ def run_reference(cg: CondensedGraph, weights: Dict[int, np.ndarray],
             else:
                 acc = mm(x.reshape(-1, W.shape[0]).astype(np.int32), W)
                 ho, wo, n = 1, 1, W.shape[1]
+            if faults is not None:
+                acc = faults.corrupt_acc(acc, g.idx, s)
             acc_dbg.append(acc.copy())
             sv = (outs[side[0]][s] if side
                   else (inputs[s] if main is None else outs[main][s])) \

@@ -153,7 +153,8 @@ class _Core:
 
 class Simulator:
     def __init__(self, chip: ChipConfig, isa: Isa, mode: str = "perf",
-                 max_cycles: float = 5e9, engine: str = "auto") -> None:
+                 max_cycles: float = 5e9, engine: str = "auto",
+                 faults: Optional[object] = None) -> None:
         if mode not in ("perf", "func"):
             raise ValueError(mode)
         if engine not in ENGINES:
@@ -170,6 +171,11 @@ class Simulator:
         self.func = mode == "func"
         self.engine = engine
         self.max_cycles = max_cycles
+        # physical CIM-array fault injection (functional mode): any
+        # object with corrupt_loaded(core_id, mg, w) -> w', typically a
+        # repro.faults.PhysicalCimFaults.  None = fault-free (exact
+        # no-op; perf-mode timing never depends on it).
+        self.faults = faults
         self._vfunct_names = {v: k for k, v in VFUNCT.items()}
 
     # -- public API ------------------------------------------------------------
@@ -375,6 +381,10 @@ class Simulator:
                 src = int(G[a["src"]])
                 w = core.lmem[src:src + rows * n_len] \
                     .reshape(rows, n_len).copy()
+                if self.faults is not None:
+                    # the array's stuck bits corrupt whatever the
+                    # compiler latches into it
+                    w = self.faults.corrupt_loaded(core.id, a["mg"], w)
             core.mgs[a["mg"]] = _MgState(
                 w=w, rows=rows, n_len=n_len,
                 k_off=core.sreg("MG_KOFF"), n_off=core.sreg("MG_NOFF"))

@@ -33,7 +33,7 @@ from .search import (SearchResult, by_cycles, by_edp, by_energy,
                      successive_halving)
 from .space import (SWEEP_FLIT, SWEEP_MG, DesignPoint, DesignSpace,
                     Dimension, default_space, mesh_space, mg_flit_space,
-                    timing_space)
+                    protection_space, timing_space)
 
 __all__ = [
     "cache", "cli", "engine", "fleet", "pareto", "records", "search",
@@ -47,6 +47,6 @@ __all__ = [
     "SearchResult", "by_cycles", "by_edp", "by_energy", "grid_search",
     "hill_climb", "random_search", "successive_halving",
     "DesignPoint", "DesignSpace", "Dimension", "default_space",
-    "mesh_space", "mg_flit_space", "timing_space",
+    "mesh_space", "mg_flit_space", "protection_space", "timing_space",
     "SWEEP_MG", "SWEEP_FLIT",
 ]

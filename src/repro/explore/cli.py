@@ -33,7 +33,7 @@ from .pareto import frontier_report
 from .records import EvalRecord, RecordStore
 from .search import by_edp, successive_halving
 from .space import (DesignSpace, default_space, mg_flit_space,
-                    timing_space)
+                    protection_space, timing_space)
 
 __all__ = ["main"]
 
@@ -62,13 +62,15 @@ def _build_space(args: argparse.Namespace) -> DesignSpace:
         if s not in STRATEGIES:
             raise SystemExit(f"unknown strategy {s!r}; "
                              f"have {list(STRATEGIES)}")
-    if args.space in ("default", "timing"):
+    if args.space in ("default", "timing", "protection"):
         if args.mg is not None or args.flit is not None:
             raise SystemExit("--mg/--flit restrict the mg-flit grid "
                              "only; they cannot be combined with "
                              f"--space {args.space}")
         if args.space == "timing":
             return timing_space(strategies=strategies)
+        if args.space == "protection":
+            return protection_space(strategies=strategies)
         return default_space(strategies=strategies)
     return mg_flit_space(_ints(args.mg or "4,8,16"),
                          _ints(args.flit or "8,16"),
@@ -104,7 +106,11 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
         print(f"\ntop-{args.top_k} promoted to the simulator:")
         print(_row_table(result.history))
     else:
-        recs = eng.sweep(space, fidelity=args.fidelity)
+        if args.resume and not args.store:
+            raise SystemExit("--resume needs --store (the JSONL record "
+                             "store is what the sweep resumes from)")
+        recs = eng.sweep(space, fidelity=args.fidelity,
+                         resume=args.resume)
         print(_row_table(recs))
     print(f"\ncache: {eng.cache_stats()}")
     if args.store:
@@ -157,7 +163,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     sw.add_argument("--res", type=int, default=None,
                     help="input resolution for CNN workloads")
     sw.add_argument("--batch", type=int, default=4)
-    sw.add_argument("--space", choices=("mg-flit", "default", "timing"),
+    sw.add_argument("--space", choices=("mg-flit", "default", "timing",
+                                        "protection"),
                     default="mg-flit",
                     help="mg-flit: Fig.6 grid; default: full 5-dim "
                          "space; timing: 64-point unit-latency grid "
@@ -198,6 +205,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="perf-simulator engine for simulate-fidelity "
                          "points; jax batches same-structure chips "
                          "through one vmapped XLA program")
+    sw.add_argument("--resume", action="store_true",
+                    help="skip points already successfully recorded "
+                         "in --store (restart a killed sweep where "
+                         "it left off)")
     sw.add_argument("--store", default=None,
                     help="append records to this JSONL file")
     sw.add_argument("--cache-root", default=None)

@@ -225,6 +225,8 @@ class ExplorationEngine:
                  calibration: Union[Calibration, str, None] = None,
                  flow_cache: Optional[str] = None,
                  engine: str = "auto",
+                 pool_retries: int = 2,
+                 pool_backoff_s: float = 0.5,
                  **workload_kw: Any) -> None:
         # validate eagerly: an unknown model raising inside a pool
         # worker's initializer would respawn workers forever
@@ -237,6 +239,11 @@ class ExplorationEngine:
                              f"got {engine!r}")
         self.engine = engine
         self.model = model
+        if pool_retries < 0 or pool_backoff_s < 0:
+            raise ValueError("pool_retries and pool_backoff_s must be "
+                             "non-negative")
+        self.pool_retries = pool_retries
+        self.pool_backoff_s = pool_backoff_s
         self.workload_kw = dict(workload_kw)
         self.params = params or CostParams(batch=4)
         self.pool = int(pool)
@@ -447,12 +454,87 @@ class ExplorationEngine:
         return self.evaluate([point], fidelity)[0]
 
     def sweep(self, space: DesignSpace,
-              fidelity: Optional[str] = None) -> List[EvalRecord]:
-        """Exhaustive grid evaluation of a space."""
-        return self.evaluate(space.points(), fidelity)
+              fidelity: Optional[str] = None,
+              resume: bool = False) -> List[EvalRecord]:
+        """Exhaustive grid evaluation of a space.
+
+        With ``resume=True`` (requires a ``store``), points that this
+        engine's :class:`RecordStore` already holds a *successful*
+        record for — same model, same fidelity — are not re-evaluated:
+        the stored record is returned in place.  A sweep killed
+        mid-run (OOM, Ctrl-C, node preemption) picks up where the
+        JSONL left off instead of starting over; failed records are
+        always retried.
+        """
+        fidelity = fidelity or self.fidelity
+        points = space.points()
+        if not resume:
+            return self.evaluate(points, fidelity)
+        if self.store is None:
+            raise ValueError("sweep(resume=True) needs a RecordStore "
+                             "(construct the engine with store=...)")
+        prior: Dict[DesignPoint, EvalRecord] = {}
+        for rec in self.store:
+            if rec.ok and rec.model == self.model \
+                    and rec.fidelity == fidelity:
+                prior[rec.point] = rec
+        todo = [pt for pt in points if pt not in prior]
+        skipped = len(points) - len(todo)
+        if skipped:
+            warnings.warn(
+                f"sweep resume: skipping {skipped}/{len(points)} "
+                f"points already recorded in {self.store.path}",
+                RuntimeWarning, stacklevel=2)
+        fresh: Dict[DesignPoint, EvalRecord] = {}
+        if todo:
+            # evaluate() appends the fresh records to the store itself
+            fresh = {r.point: r for r in self.evaluate(todo, fidelity)}
+        return [prior[pt] if pt in prior else fresh[pt]
+                for pt in points]
 
     def _run_pool(self, jobs: List[Tuple[DesignPoint, str]],
                   fidelity: str) -> List[Dict[str, Any]]:
+        """Pool evaluation with bounded retry.
+
+        Worker *exceptions* are already captured per point
+        (``_err_payload``); what reaches here is pool-infrastructure
+        failure — a worker killed by the OOM reaper, a wedged fork,
+        an unpicklable result.  Those are frequently transient, so the
+        batch is retried with exponential backoff; when the pool keeps
+        collapsing, the sweep degrades to serial in-process evaluation
+        rather than dying.
+        """
+        last: Optional[BaseException] = None
+        for attempt in range(self.pool_retries + 1):
+            try:
+                return self._run_pool_once(jobs, fidelity)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:     # noqa: BLE001 — pool-level only
+                last = e
+                if attempt < self.pool_retries:
+                    delay = self.pool_backoff_s * (2 ** attempt)
+                    warnings.warn(
+                        f"worker pool failed ({type(e).__name__}: {e});"
+                        f" retrying batch in {delay:.1f}s "
+                        f"(attempt {attempt + 1}/{self.pool_retries})",
+                        RuntimeWarning, stacklevel=2)
+                    time.sleep(delay)
+        warnings.warn(
+            f"worker pool failed {self.pool_retries + 1} times "
+            f"({type(last).__name__}: {last}); falling back to serial "
+            f"in-process evaluation for this batch",
+            RuntimeWarning, stacklevel=2)
+        _WORKER["cg"] = self.cg
+        _WORKER["params"] = self.params
+        _WORKER["calibration"] = self.calibration
+        _WORKER["engine"] = self.engine
+        if fidelity in _CHEAP:
+            return _eval_batch_worker(jobs)
+        return [_eval_worker(j) for j in jobs]
+
+    def _run_pool_once(self, jobs: List[Tuple[DesignPoint, str]],
+                       fidelity: str) -> List[Dict[str, Any]]:
         try:
             # fork children inherit the parent's prepared graph — no
             # per-worker workloads.build() in the initializer

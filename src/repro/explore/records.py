@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
 
@@ -137,10 +138,20 @@ class RecordStore:
         if not os.path.exists(self.path):
             return
         with open(self.path) as f:
-            for line in f:
+            for lineno, line in enumerate(f, 1):
                 line = line.strip()
-                if line:
+                if not line:
+                    continue
+                try:
                     yield EvalRecord.from_dict(json.loads(line))
+                except (json.JSONDecodeError, KeyError, TypeError) as e:
+                    # a crash mid-append leaves a truncated last line;
+                    # skip it (the sweep will simply redo that point)
+                    # instead of making the whole store unreadable
+                    warnings.warn(
+                        f"record store {self.path}:{lineno}: skipping "
+                        f"unreadable record ({type(e).__name__}: {e})",
+                        RuntimeWarning, stacklevel=2)
 
     def load(self) -> List[EvalRecord]:
         out: List[EvalRecord] = []

@@ -22,13 +22,14 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from ..core.arch import ArchError, ChipConfig, default_chip
+from ..core.arch import (ArchError, ChipConfig, ProtectionConfig,
+                         default_chip)
 from ..core.partition import STRATEGIES
 
 __all__ = [
     "DesignPoint", "Dimension", "DesignSpace", "default_space",
-    "mg_flit_space", "mesh_space", "timing_space", "SWEEP_MG",
-    "SWEEP_FLIT",
+    "mg_flit_space", "mesh_space", "timing_space", "protection_space",
+    "SWEEP_MG", "SWEEP_FLIT",
 ]
 
 # The paper's Fig. 6 / Fig. 7 grid — the single source of truth shared
@@ -71,8 +72,21 @@ class DesignPoint:
     vector_alu_latency: int = 1
     weight_load_rows_per_cycle: int = 1
     router_latency: int = 2
+    # fault-mitigation axes (repro.faults): cycle/energy/area overhead
+    # vs residual fault rate.  All-off keeps the historical chip.
+    ecc: bool = False
+    spare_rows: int = 0
+    tmr: bool = False
 
     def chip(self) -> ChipConfig:
+        prot = ProtectionConfig(ecc=self.ecc,
+                                spare_rows=self.spare_rows,
+                                tmr=self.tmr)
+        suffix = ""
+        if prot.enabled:
+            suffix = ("-p" + ("e" if self.ecc else "")
+                      + (f"s{self.spare_rows}" if self.spare_rows else "")
+                      + ("t" if self.tmr else ""))
         chip = default_chip(
             macros_per_group=self.macros_per_group,
             n_macro_groups=self.n_macro_groups,
@@ -80,9 +94,10 @@ class DesignPoint:
             local_mem_kb=self.local_mem_kb,
             n_cores=self.n_cores,
             mesh_cols=_mesh_cols(self.n_cores),
+            protection=prot,
             name=(f"c{self.n_cores}-mg{self.macros_per_group}"
                   f"x{self.n_macro_groups}-f{self.flit_bytes}"
-                  f"-l{self.local_mem_kb}"),
+                  f"-l{self.local_mem_kb}{suffix}"),
         )
         if (self.scalar_alu_latency, self.vector_alu_latency,
                 self.weight_load_rows_per_cycle,
@@ -318,6 +333,24 @@ def timing_space(scalar_alu: Sequence[int] = (1, 2),
         Dimension("vector_alu_latency", tuple(vector_alu)),
         Dimension("weight_load_rows_per_cycle", tuple(wl_rate)),
         Dimension("router_latency", tuple(router)),
+        Dimension("strategy", tuple(strategies)),
+    ])
+
+
+def protection_space(spares: Sequence[int] = (0, 2, 4),
+                     strategies: Sequence[str] = ("dp",)) -> DesignSpace:
+    """Fault-mitigation sweep on the default structure (12 points).
+
+    ECC x TMR x spare-row grid over one chip: pairs with
+    :func:`repro.faults.residual_rate` to trade protection overhead
+    (cycles/energy via :class:`~repro.core.machine.MachineModel`
+    accessors, area via ``protection_area_factor``) against residual
+    fault rate at a given raw-defect rate.
+    """
+    return DesignSpace([
+        Dimension("ecc", (False, True)),
+        Dimension("tmr", (False, True)),
+        Dimension("spare_rows", tuple(spares)),
         Dimension("strategy", tuple(strategies)),
     ])
 

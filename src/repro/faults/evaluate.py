@@ -1,0 +1,52 @@
+"""Fault-rate degradation curves on the numpy oracle.
+
+One call = one workload swept across stuck-at fault rates: resolve a
+:class:`~repro.faults.model.FaultModel` per rate, corrupt the weights,
+re-run the oracle and score bit-error rate / top-1 agreement against
+the fault-free outputs.  Deterministic end to end (fixed seed), so the
+resulting curve is golden-able — ``benchmarks/bench_faults.py`` pins
+exactly this path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any, Dict, List, Optional, Sequence
+
+from .metrics import bit_error_rate, top1_agreement
+from .model import FaultModel, resolve_faults
+
+__all__ = ["degradation_curve"]
+
+
+def degradation_curve(cg: Any, chip: Any, rates: Sequence[float],
+                      batch: int = 4, seed: int = 0,
+                      base: Optional[FaultModel] = None
+                      ) -> List[Dict[str, float]]:
+    """BER / top-1 agreement of a condensed graph per stuck-at rate.
+
+    ``base`` carries the non-``rate`` fault knobs (transient rate,
+    seed); per sweep step only ``rate`` changes.  Returns one row per
+    rate: ``{"rate", "n_stuck", "ber", "top1_agreement"}``.
+    """
+    from ..core import ref
+
+    weights, biases, inputs = ref.random_init(cg, batch=batch, seed=seed)
+    quant = ref.auto_quant(cg, weights, biases, inputs)
+    clean = ref.run_reference(cg, weights, biases, quant, inputs)
+    final_gid = max(clean)
+    rows: List[Dict[str, float]] = []
+    fm0 = base if base is not None else FaultModel(seed=seed)
+    for rate in rates:
+        fm = replace(fm0, rate=float(rate))
+        fs = resolve_faults(weights, chip, fm)
+        faulty = ref.run_reference(cg, weights, biases, quant, inputs,
+                                   faults=fs)
+        rows.append({
+            "rate": float(rate),
+            "n_stuck": float(fs.n_stuck),
+            "ber": bit_error_rate(clean, faulty),
+            "top1_agreement": top1_agreement(clean[final_gid],
+                                             faulty[final_gid]),
+        })
+    return rows

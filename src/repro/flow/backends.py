@@ -160,17 +160,20 @@ class SimulatorBackend(Backend):
     def evaluate(self, artifact: Any,
                  gmem_image: Optional[np.ndarray] = None,
                  engine: Optional[str] = None,
+                 faults: Optional[Any] = None,
                  **kw: Any) -> EvalReport:
         if kw:
-            raise TypeError(f"simulator backend takes only gmem_image "
-                            f"and engine, got {sorted(kw)}")
+            raise TypeError(f"simulator backend takes only gmem_image, "
+                            f"engine and faults, got {sorted(kw)}")
         t0 = time.perf_counter()
         model = artifact.ensure_model()
         # pass the engine through unchanged: Simulator itself rejects
         # func+vector and unknown engines, so an explicit override is
-        # never silently ignored
+        # never silently ignored.  ``faults`` (functional mode) is a
+        # repro.faults.PhysicalCimFaults injecting stuck bits at
+        # CIM_LOAD time.
         sim = Simulator(artifact.chip, model.isa, mode=self.mode,
-                        engine=engine or self.engine)
+                        engine=engine or self.engine, faults=faults)
         rep = sim.run_model(model, gmem_image=gmem_image)
         batch = model.batch
         return EvalReport(
@@ -205,10 +208,12 @@ class PallasFuncBackend(Backend):
     def evaluate(self, artifact: Any, weights: Any = None,
                  biases: Any = None, inputs: Any = None,
                  quant: Any = None, check: bool = True,
-                 seed: int = 0, **kw: Any) -> EvalReport:
+                 seed: int = 0, faults: Any = None,
+                 **kw: Any) -> EvalReport:
         if kw:
             raise TypeError(f"func:pallas backend takes weights/biases/"
-                            f"inputs/quant/check/seed, got {sorted(kw)}")
+                            f"inputs/quant/check/seed/faults, "
+                            f"got {sorted(kw)}")
         from ..core import ref
         t0 = time.perf_counter()
         cg = artifact.cg
@@ -223,10 +228,14 @@ class PallasFuncBackend(Backend):
             batch = int(inputs.shape[0])
         if quant is None:
             quant = ref.auto_quant(cg, weights, biases, inputs)
+        # ``faults`` (a repro.faults.FaultSet) corrupts both oracles
+        # identically, so the bit-equality check stays meaningful on
+        # faulty runs — it validates the kernel, not the fault model
         outs = ref.run_reference(cg, weights, biases, quant, inputs,
-                                 matmul=_pallas_matmul)
+                                 matmul=_pallas_matmul, faults=faults)
         if check:
-            want = ref.run_reference(cg, weights, biases, quant, inputs)
+            want = ref.run_reference(cg, weights, biases, quant, inputs,
+                                     faults=faults)
             for gid, arr in want.items():
                 got = outs[gid]
                 if got.shape != arr.shape or not np.array_equal(got, arr):

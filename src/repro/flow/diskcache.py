@@ -25,6 +25,7 @@ import os
 import pickle
 import tempfile
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 __all__ = ["PassDiskCache", "ENV_VAR"]
@@ -51,17 +52,37 @@ class PassDiskCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.corrupt = 0    # unreadable entries dropped by get()
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], key + ".pkl")
 
     def get(self, key: str) -> Tuple[bool, Any]:
+        path = self._path(key)
         try:
-            with open(self._path(key), "rb") as f:
+            with open(path, "rb") as f:
                 out = pickle.load(f)
+        except FileNotFoundError:
+            self.misses += 1                  # plain miss: stay quiet
+            return False, None
         except (OSError, pickle.UnpicklingError, EOFError,
-                AttributeError, ImportError):
-            # missing, torn, or pickled against older class layouts
+                AttributeError, ImportError, ValueError,
+                IndexError) as e:
+            # the file exists but cannot be loaded: truncated by a
+            # crash mid-copy, bit-rotted, or pickled against an older
+            # class layout.  Drop it so the recompute can repopulate
+            # the slot (put() is atomic, so we never tear a good entry)
+            # and say so once — a silently swallowed corruption that
+            # recurs every run is a debugging tarpit.
+            warnings.warn(
+                f"flow disk cache: dropping unreadable entry {path} "
+                f"({type(e).__name__}: {e}); it will be recomputed",
+                RuntimeWarning, stacklevel=2)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            self.corrupt += 1
             self.misses += 1
             return False, None
         self.hits += 1
@@ -194,4 +215,5 @@ class PassDiskCache:
 
     @property
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses}
+        return {"hits": self.hits, "misses": self.misses,
+                "corrupt": self.corrupt}

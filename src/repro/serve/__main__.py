@@ -45,6 +45,24 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--max-batch", type=int, default=8)
     p.add_argument("--kv-frac", type=float, default=0.5,
                    help="fraction of global memory reserved for KV")
+    p.add_argument("--deadline-s", type=float, default=None,
+                   help="per-request SLO (s) from arrival; late "
+                        "completions count as timeouts and drop out "
+                        "of goodput")
+    p.add_argument("--max-queue", type=int, default=None,
+                   help="prefill admission cap: arrivals that find "
+                        "this many requests waiting are shed (with "
+                        "--max-retries retry attempts)")
+    p.add_argument("--max-retries", type=int, default=0,
+                   help="retry attempts for shed requests "
+                        "(exponential backoff)")
+    p.add_argument("--retry-backoff-s", type=float, default=0.05,
+                   help="base backoff before a shed request retries")
+    p.add_argument("--max-sim-s", type=float, default=None,
+                   help="abort the replay with a diagnostic if "
+                        "simulated time passes this cap (guards "
+                        "against over-capacity traces running "
+                        "unboundedly long)")
     p.add_argument("--n-layers", type=int, default=2)
     p.add_argument("--d-model", type=int, default=128)
     p.add_argument("--n-heads", type=int, default=4)
@@ -100,12 +118,18 @@ def _trace(args: argparse.Namespace) -> List[Request]:
 
 def _report(m: Dict[str, Any]) -> str:
     t, p = m["ttft_s"], m["tpot_s"]
-    return (
+    s = (
         f"policy={m['policy']:<11s} req={m['requests']} "
         f"tok/s={m['throughput_tok_s']:8.1f} "
         f"ttft p50={t['p50'] * 1e3:7.2f}ms p95={t['p95'] * 1e3:7.2f}ms "
         f"p99={t['p99'] * 1e3:7.2f}ms  "
         f"tpot p50={p['p50'] * 1e6:6.1f}us p99={p['p99'] * 1e6:6.1f}us")
+    if "goodput_tok_s" in m:
+        s += (f"  goodput={m['goodput_tok_s']:8.1f} "
+              f"shed={m['shed_requests']} "
+              f"timeout={m['timeout_requests']} "
+              f"retries={m['retries']}")
+    return s
 
 
 def main(argv: List[str] | None = None) -> int:
@@ -133,8 +157,15 @@ def main(argv: List[str] | None = None) -> int:
     results: Dict[str, Any] = {}
     for name in policies:
         sim = ServeSim(table, make_policy(name, args.max_batch),
-                       kv_frac=args.kv_frac)
-        m = sim.run(requests)
+                       kv_frac=args.kv_frac,
+                       deadline_s=args.deadline_s,
+                       max_queue=args.max_queue,
+                       max_retries=args.max_retries,
+                       retry_backoff_s=args.retry_backoff_s)
+        try:
+            m = sim.run(requests, max_sim_s=args.max_sim_s)
+        except RuntimeError as e:
+            raise SystemExit(f"error: {e}") from None
         results[name] = m
         print(_report(m))
     if args.json:

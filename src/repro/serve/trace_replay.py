@@ -19,12 +19,20 @@ workload.StepCostTable` with prefill/decode disaggregation:
 
 The simulator touches no wall clock and no global RNG — identical
 trace + table + policy produce identical metrics JSON.
+
+Degraded operation is opt-in: pass ``deadline_s`` and/or ``max_queue``
+to :class:`ServeSim` and the simulator adds request deadlines, load
+shedding on queue pressure (with bounded retry-and-backoff), and
+*goodput* — tokens from requests that met their deadline — to the
+metrics.  With neither set, the simulation and its metrics JSON are
+byte-identical to the fault-free simulator.
 """
 from __future__ import annotations
 
 import heapq
 import json
 import random
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -141,11 +149,32 @@ class _Live:
 
 
 class ServeSim:
-    """Replay an arrival trace against a compiled step-cost table."""
+    """Replay an arrival trace against a compiled step-cost table.
+
+    ``deadline_s``/``max_queue`` switch on degraded-mode machinery:
+
+    * ``max_queue`` — admission control at the prefill engine.  A
+      request arriving while ``max_queue`` requests already wait is
+      *shed*; while it has retries left it re-arrives after an
+      exponential backoff (``retry_backoff_s * 2**attempt``), keeping
+      its original arrival time for latency accounting, otherwise it
+      is dropped and counted in ``shed_requests``.
+    * ``deadline_s`` — per-request SLO from the *original* arrival.  A
+      request finishing late still completes (no mid-flight cancel —
+      the engine already spent the cycles) but counts as a timeout and
+      contributes nothing to goodput.
+
+    With both unset (the default) every code path, record and metrics
+    key is identical to the pre-degradation simulator.
+    """
 
     def __init__(self, table: StepCostTable, policy: Batcher,
                  kv_capacity_bytes: Optional[int] = None,
-                 kv_frac: float = 0.5) -> None:
+                 kv_frac: float = 0.5,
+                 deadline_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 max_retries: int = 0,
+                 retry_backoff_s: float = 0.05) -> None:
         self.table = table
         self.policy = policy
         if kv_capacity_bytes is None:
@@ -157,6 +186,22 @@ class ServeSim:
                 f"KV budget {kv_capacity_bytes}B cannot hold one "
                 f"max-length request ({one}B)")
         self.kv_capacity_bytes = kv_capacity_bytes
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if max_retries < 0 or retry_backoff_s < 0:
+            raise ValueError("max_retries and retry_backoff_s must "
+                             "be non-negative")
+        self.deadline_s = deadline_s
+        self.max_queue = max_queue
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+
+    @property
+    def degraded(self) -> bool:
+        """True when any degradation feature is switched on."""
+        return self.deadline_s is not None or self.max_queue is not None
 
     # -- prefill engine ----------------------------------------------
 
@@ -177,11 +222,69 @@ class ServeSim:
             out.append((end, req, rec))
         return out
 
+    def _run_prefill_shedding(self, requests: Sequence[Request]
+                              ) -> Tuple[
+                                  List[Tuple[float, Request,
+                                             RequestRecord]],
+                                  int, int]:
+        """FIFO prefill with queue-pressure admission control.
+
+        Returns ``(ready, shed, retries)``.  A request whose (re-)
+        arrival finds ``max_queue`` requests already waiting for the
+        prefill engine is bounced: retried after backoff while
+        attempts remain, shed for good otherwise.  Records keep the
+        *original* arrival time, so retry delay shows up in TTFT/e2e
+        exactly as a client would measure it.
+        """
+        cap = self.max_queue if self.max_queue is not None else None
+        # (effective arrival, rid, attempt, request)
+        pend = [(r.t_arrive, r.rid, 0, r) for r in requests]
+        heapq.heapify(pend)
+        free = 0.0
+        starts: List[float] = []   # admitted-but-not-started, FIFO
+        out: List[Tuple[float, Request, RequestRecord]] = []
+        shed = 0
+        retries = 0
+        while pend:
+            ta, _, attempt, req = heapq.heappop(pend)
+            # drain the wait queue of everything that started by ta
+            while starts and starts[0] <= ta:
+                starts.pop(0)
+            if cap is not None and len(starts) >= cap:
+                if attempt < self.max_retries:
+                    retries += 1
+                    t_retry = ta + self.retry_backoff_s * (2 ** attempt)
+                    heapq.heappush(
+                        pend, (t_retry, req.rid, attempt + 1, req))
+                else:
+                    shed += 1
+                continue
+            start = max(free, ta)
+            end = start + self.table.prefill_s(req.prompt_len)
+            free = end
+            if start > ta:
+                starts.append(start)
+            rec = RequestRecord(
+                rid=req.rid, t_arrive=req.t_arrive,
+                prompt_len=req.prompt_len, gen_len=req.gen_len,
+                t_prefill_start=start, t_first_token=end,
+                t_complete=end, token_times=[end])
+            out.append((end, req, rec))
+        return out, shed, retries
+
     # -- decode engine -----------------------------------------------
 
-    def run(self, requests: Sequence[Request]) -> Dict[str, Any]:
-        ready = self._run_prefill(requests)
+    def run(self, requests: Sequence[Request],
+            max_sim_s: Optional[float] = None) -> Dict[str, Any]:
+        if self.max_queue is not None:
+            ready, shed, retries = self._run_prefill_shedding(requests)
+        else:
+            ready = self._run_prefill(requests)
+            shed, retries = 0, 0
         records: List[RequestRecord] = [rec for _, _, rec in ready]
+        if max_sim_s is not None and ready and \
+                max(end for end, _, _ in ready) > max_sim_s:
+            raise RuntimeError(self._overload_diag(ready, max_sim_s))
 
         # single-token requests never enter the decode engine
         heap: List[Tuple[float, int, Request, RequestRecord]] = []
@@ -195,6 +298,7 @@ class ServeSim:
         peak_kv = 0
         peak_batch = 0
         iterations = 0
+        decode_busy = 0.0
         t = 0.0
         while heap or queue or active:
             # surface everything that has finished prefill by now
@@ -224,7 +328,11 @@ class ServeSim:
 
             dt = self.table.iteration_s([l.kv_len for l in active])
             t += dt
+            decode_busy += dt
             iterations += 1
+            if max_sim_s is not None and t > max_sim_s:
+                raise RuntimeError(self._overload_diag(ready, max_sim_s,
+                                                       t=t))
             peak_batch = max(peak_batch, len(active))
             peak_kv = max(peak_kv, kv_used)
             done: List[_Live] = []
@@ -248,4 +356,87 @@ class ServeSim:
             "decode_iterations": iterations,
             "peak_decode_batch": peak_batch,
         }
+        self._warn_if_saturated(records, decode_busy, t)
+        if self.degraded:
+            extra.update(self._degradation_extra(records, shed,
+                                                 retries))
         return summarize(records, extra)
+
+    # -- degraded-mode accounting ------------------------------------
+
+    def _degradation_extra(self, records: Sequence[RequestRecord],
+                           shed: int, retries: int) -> Dict[str, Any]:
+        """shed/timeout/retry counters and goodput (gated keys)."""
+        timeouts = 0
+        good_toks = 0
+        for rec in records:
+            late = (self.deadline_s is not None and
+                    rec.t_complete - rec.t_arrive > self.deadline_s)
+            if late:
+                timeouts += 1
+            else:
+                good_toks += rec.gen_len
+        if records:
+            t0 = min(r.t_arrive for r in records)
+            t1 = max(r.t_complete for r in records)
+            makespan = max(t1 - t0, 1e-12)
+        else:
+            makespan = 0.0
+        return {
+            "shed_requests": shed,
+            "retries": retries,
+            "timeout_requests": timeouts,
+            # tokens that arrived in time, per second — under overload
+            # this drops below throughput_tok_s even as the engine
+            # stays busy, which is the whole point of measuring it
+            "goodput_tok_s": good_toks / makespan if makespan else 0.0,
+        }
+
+    # -- overload diagnostics ----------------------------------------
+
+    def _utilization(self, records: Sequence[RequestRecord],
+                     decode_busy: float,
+                     t_end: float) -> Tuple[float, float]:
+        """(prefill, decode) busy fractions over their active spans."""
+        if not records:
+            return 0.0, 0.0
+        t0 = min(r.t_arrive for r in records)
+        prefill_busy = sum(r.t_first_token - r.t_prefill_start
+                           for r in records)
+        prefill_span = max(r.t_first_token for r in records) - t0
+        decode_span = t_end - t0
+        u_pre = prefill_busy / prefill_span if prefill_span > 0 else 0.0
+        u_dec = decode_busy / decode_span if decode_span > 0 else 0.0
+        return u_pre, u_dec
+
+    def _warn_if_saturated(self, records: Sequence[RequestRecord],
+                           decode_busy: float, t_end: float,
+                           threshold: float = 0.95) -> None:
+        u_pre, u_dec = self._utilization(records, decode_busy, t_end)
+        if max(u_pre, u_dec) < threshold:
+            return
+        stage = "prefill" if u_pre >= u_dec else "decode"
+        warnings.warn(
+            f"serving replay saturated: {stage} engine utilization "
+            f"{max(u_pre, u_dec):.3f} (prefill {u_pre:.3f}, decode "
+            f"{u_dec:.3f}) — offered load is at or beyond capacity, "
+            f"so queueing delay grows with trace length and latency "
+            f"percentiles reflect the trace, not the system; lower "
+            f"the arrival rate or enable load shedding (max_queue=)",
+            RuntimeWarning, stacklevel=3)
+
+    def _overload_diag(self, ready: Sequence[Tuple[float, Request,
+                                                   RequestRecord]],
+                       max_sim_s: float,
+                       t: Optional[float] = None) -> str:
+        recs = [rec for _, _, rec in ready]
+        t0 = min(r.t_arrive for r in recs) if recs else 0.0
+        where = (f"decode clock reached {t:.3f}s" if t is not None
+                 else f"prefill backlog extends past "
+                      f"{max(e for e, _, _ in ready):.3f}s")
+        return (f"serving replay exceeded max_sim_s={max_sim_s:g}s: "
+                f"{where} for a trace starting at {t0:.3f}s — the "
+                f"offered load exceeds sustainable capacity and the "
+                f"replay would run (almost) unboundedly long; lower "
+                f"the arrival rate, shrink the trace, enable load "
+                f"shedding (max_queue=), or raise max_sim_s")

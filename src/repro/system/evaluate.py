@@ -45,14 +45,27 @@ class SystemReport(EvalReport):
     comm_cycles: float = 0.0           # inter-chip transfer/collective
     bottleneck_cycles: float = 0.0     # steady-state pipeline interval
     per_chip: List[EvalReport] = field(default_factory=list)
+    # degraded-mode accounting: chips/links the plan routed around.
+    # ``throughput_sps`` above IS the degraded throughput when these
+    # are nonzero — chip-loss degradation curves read it directly.
+    n_failed_chips: int = 0
+    n_failed_links: int = 0
+
+    @property
+    def degraded(self) -> bool:
+        return self.n_failed_chips > 0 or self.n_failed_links > 0
 
     def summary(self) -> str:
-        return (f"[{self.backend}/{self.mode}x{self.n_chips}] "
-                f"{self.cycles:.0f} cycles "
-                f"({self.comm_cycles:.0f} inter-chip), "
-                f"{self.energy_total / 1e6:.3f} mJ, "
-                f"{self.throughput_sps:.1f} samples/s "
-                f"(batch={self.batch})")
+        s = (f"[{self.backend}/{self.mode}x{self.n_chips}] "
+             f"{self.cycles:.0f} cycles "
+             f"({self.comm_cycles:.0f} inter-chip), "
+             f"{self.energy_total / 1e6:.3f} mJ, "
+             f"{self.throughput_sps:.1f} samples/s "
+             f"(batch={self.batch})")
+        if self.degraded:
+            s += (f" [degraded: -{self.n_failed_chips} chips, "
+                  f"-{self.n_failed_links} links]")
+        return s
 
 
 def _merge_energy(reports: List[EvalReport],
@@ -92,8 +105,10 @@ def evaluate_plan(plan: SystemPlan, chip: Any, reports: List[EvalReport],
         bottleneck = max(r.cycles + incident[i]
                          for i, r in enumerate(reports))
     else:                                      # tensor
+        # collectives ring over the *participating* chips (== the mesh
+        # size on a healthy system, fewer under failover)
         comm = sum(m.interchip_collective_cycles(
-            c.nbytes * batch, link, sys.n_chips, kind=c.kind,
+            c.nbytes * batch, link, n, kind=c.kind,
             ports=ports) for c in plan.collectives)
         cycles = max(r.cycles for r in reports) + comm
         bottleneck = cycles
@@ -111,4 +126,6 @@ def evaluate_plan(plan: SystemPlan, chip: Any, reports: List[EvalReport],
         throughput_sps=_throughput(chip, bottleneck, batch),
         batch=batch, wall_s=time.perf_counter() - t0, trace=stitched,
         mode=plan.mode, n_chips=n, comm_cycles=float(comm),
-        bottleneck_cycles=float(bottleneck), per_chip=list(reports))
+        bottleneck_cycles=float(bottleneck), per_chip=list(reports),
+        n_failed_chips=len(sys.failed_chips),
+        n_failed_links=len(sys.failed_links))

@@ -84,6 +84,12 @@ class ChipSlice:
     in op order, back to their origin: ``("input", op_idx)`` for an
     original graph input, ``("group", gid)`` for a cut-crossing
     producer group — the func-mode stitcher feeds each chip from this.
+
+    ``chip_id`` is the *logical* slice index (0..n-1, what transfers
+    and per-chip reports index); ``slot`` is the *physical* mesh slot
+    the slice landed on.  They coincide on a healthy mesh and diverge
+    under failover, when slices skip failed slots (``-1`` = legacy
+    plan, read it as ``chip_id``).
     """
 
     chip_id: int
@@ -93,6 +99,11 @@ class ChipSlice:
     macs: int = 0                       # unique MACs charged to this slice
     out_bytes: int = 0                  # unique boundary bytes charged
     weight_bytes: int = 0               # resident (non-dynamic) weights
+    slot: int = -1                      # physical mesh slot (-1 = chip_id)
+
+    @property
+    def mesh_slot(self) -> int:
+        return self.chip_id if self.slot < 0 else self.slot
 
 
 @dataclass
@@ -124,7 +135,7 @@ class SystemPlan:
         collective ring traffic)."""
         b = max(1, int(batch))
         total = sum(t.nbytes for t in self.transfers) * b
-        c = self.system.n_chips
+        c = max(1, len(self.slices))     # participating (surviving) chips
         for col in self.collectives:
             steps = (c - 1) * (2 if col.kind == "allreduce" else 1)
             total += steps * (col.nbytes // max(c, 1)) * b
@@ -200,7 +211,10 @@ def split_pipeline(cg: CondensedGraph, chip: ChipConfig,
     G = len(cg.groups)
     if G == 0:
         raise SystemPlanError(f"'{cg.name}': empty condensed graph")
-    n = min(system.n_chips, G)
+    # failover: plan over the surviving mesh slots only; logical slice
+    # c lands on physical slot avail[c] (identity on a healthy mesh)
+    avail = system.alive_slots
+    n = min(len(avail), G)
     cap = chip.global_mem_bytes
 
     # -- structural cut validity ------------------------------------------
@@ -288,7 +302,8 @@ def split_pipeline(cg: CondensedGraph, chip: ChipConfig,
             macs=sum(g.macs for g in grp),
             out_bytes=sum(g.out_bytes for g in grp),
             weight_bytes=sum(g.weight_bytes for g in grp
-                             if g.weight_source != "dynamic")))
+                             if g.weight_source != "dynamic"),
+            slot=avail[c]))
 
     # -- cut-crossing transfers (deduped per producer, destination) ------
     transfers: List[Transfer] = []
@@ -309,7 +324,8 @@ def split_pipeline(cg: CondensedGraph, chip: ChipConfig,
                         gid=p, src_chip=chip_of[p],
                         dst_chip=chip_of[g.idx],
                         nbytes=op.out_elems * op.act_bits // 8,
-                        hops=system.hops(chip_of[p], chip_of[g.idx])))
+                        hops=system.hops(avail[chip_of[p]],
+                                         avail[chip_of[g.idx]])))
     transfers.sort(key=lambda t: (t.src_chip, t.dst_chip, t.gid))
     return SystemPlan(mode="pipeline", system=system, cg=cg,
                       slices=slices, transfers=tuple(transfers))
@@ -391,8 +407,12 @@ def shard_tensor(cg: CondensedGraph, chip: ChipConfig,
     int32-partial all-reduce).  Unshardable groups are replicated.
     Splits are exact-integer, so ``plan.total_macs() == cg.total_macs``
     always holds.
+
+    Under failover the shard count is the number of *surviving* chips
+    — the same workload simply re-shards wider per chip.
     """
-    C = system.n_chips
+    avail = system.alive_slots
+    C = len(avail)
     per_chip: List[List[Group]] = [[] for _ in range(C)]
     slice_macs = [0] * C
     slice_out = [0] * C
@@ -433,7 +453,7 @@ def shard_tensor(cg: CondensedGraph, chip: ChipConfig,
         workload=CondensedGraph(f"{cg.name}.tp{c}of{C}", per_chip[c],
                                 source=cg.source),
         macs=slice_macs[c], out_bytes=slice_out[c],
-        weight_bytes=slice_w[c]) for c in range(C)]
+        weight_bytes=slice_w[c], slot=avail[c]) for c in range(C)]
     return SystemPlan(mode="tensor", system=system, cg=cg,
                       slices=slices, collectives=tuple(collectives))
 

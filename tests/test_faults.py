@@ -1,0 +1,343 @@
+"""Fault injection & graceful degradation (repro.faults).
+
+The invariants pinned here are what make fault numbers trustworthy
+rather than anecdotal:
+
+* the same ``FaultModel`` seed resolves to bit-identical fault sets on
+  every run — and the corrupted outputs agree bit-exactly across the
+  numpy oracle and the functional ISS;
+* ``FaultModel(rate=0)`` is an exact no-op on every hook (oracle,
+  ISS CIM_LOAD, gmem image, accumulator);
+* protection hardware (ECC / spare rows / TMR) lowers the residual
+  rate and raises the machine-model cost — and the unprotected chip
+  is bit-identical to the pre-protection machine model;
+* a mesh plan with a failed chip conserves work exactly and stays
+  func-mode bit-exact with the single-chip oracle;
+* serving degradation (deadlines, shedding, retries) reports nonzero
+  counters under overload with byte-stable metrics JSON — and adds
+  no keys at all when switched off.
+"""
+
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import flow
+from repro.core import ref, workloads
+from repro.core.arch import ProtectionConfig, default_chip
+from repro.core.machine import machine_for
+from repro.core.mapping import CostParams
+from repro.core.codegen import compile_model
+from repro.core.partition import partition
+from repro.core.simulator import Simulator
+from repro.faults import (FaultModel, FaultSet, PhysicalCimFaults,
+                          bit_error_rate, corrupt_gmem,
+                          degradation_curve, resolve_faults,
+                          residual_rate, top1_agreement)
+from repro.flow import CompileOptions
+from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
+                         make_policy, metrics_json, poisson_trace)
+from repro.system import SystemConfig, split_pipeline
+
+RNG = np.random.default_rng(11)
+
+
+def _tiny_setup(batch=2):
+    cg = workloads.build("tiny_cnn", res=8, c=8).condense()
+    weights, biases, inputs = ref.random_init(cg, batch=batch, seed=3)
+    quant = ref.auto_quant(cg, weights, biases, inputs)
+    return cg, weights, biases, inputs, quant
+
+
+# ---------------------------------------------------------------------------
+# FaultModel basics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_validation_and_roundtrip():
+    with pytest.raises(ValueError):
+        FaultModel(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(transient_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultModel(seed=-1)
+    fm = FaultModel(rate=1e-3, gmem_rate=1e-6, seed=9,
+                    failed_chips=(3, 1), failed_links=((2, 0),))
+    assert fm.failed_chips == (1, 3)          # normalized sorted
+    assert fm.failed_links == ((0, 2),)
+    assert FaultModel.from_dict(fm.to_dict()) == fm
+    assert FaultModel().is_null
+    assert not fm.is_null
+
+
+def test_same_seed_bit_identical_fault_sets():
+    cg, weights, *_ = _tiny_setup()
+    chip = default_chip()
+    fm = FaultModel(rate=2e-3, seed=42)
+    a = resolve_faults(weights, chip, fm)
+    b = resolve_faults(weights, chip, fm)
+    assert a.counts == b.counts and a.n_stuck > 0
+    for gid in a.stuck:
+        np.testing.assert_array_equal(a.stuck[gid][0], b.stuck[gid][0])
+        np.testing.assert_array_equal(a.stuck[gid][1], b.stuck[gid][1])
+    # a different seed draws a different set
+    c = resolve_faults(weights, chip, FaultModel(rate=2e-3, seed=43))
+    assert any(not np.array_equal(a.stuck[g][0], c.stuck[g][0])
+               for g in a.stuck if g in c.stuck) or a.counts != c.counts
+
+
+def test_corruption_idempotent():
+    """Stuck-at faults pin bits: applying the masks twice == once."""
+    cg, weights, *_ = _tiny_setup()
+    chip = default_chip()
+    fs = resolve_faults(weights, chip, FaultModel(rate=5e-3, seed=1))
+    for gid, w in weights.items():
+        once = fs.corrupt_weight_matrix(gid, w)
+        twice = fs.corrupt_weight_matrix(gid, once)
+        np.testing.assert_array_equal(once, twice)
+
+
+def test_rate_zero_is_exact_noop():
+    cg, weights, biases, inputs, quant = _tiny_setup()
+    chip = default_chip()
+    fm = FaultModel(rate=0.0)
+    fs = resolve_faults(weights, chip, fm)
+    assert fs.n_stuck == 0 and not fs.stuck
+    clean = ref.run_reference(cg, weights, biases, quant, inputs)
+    faulty = ref.run_reference(cg, weights, biases, quant, inputs,
+                               faults=fs)
+    for gid in clean:
+        np.testing.assert_array_equal(clean[gid], faulty[gid])
+    # gmem / accumulator hooks are no-ops too
+    img = RNG.integers(-128, 128, 4096).astype(np.int8)
+    np.testing.assert_array_equal(corrupt_gmem(img, fm), img)
+    acc = RNG.integers(-1000, 1000, (7, 5)).astype(np.int32)
+    np.testing.assert_array_equal(fs.corrupt_acc(acc, 0, 0), acc)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend bit-identity of corrupted outputs
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_vs_func_iss_bit_identical_under_faults():
+    """The same logical fault set corrupts the numpy oracle and the
+    gmem image the ISS executes — outputs must match bit for bit."""
+    cg, weights, biases, inputs, quant = _tiny_setup()
+    chip = default_chip(n_cores=8, mesh_cols=4)
+    fm = FaultModel(rate=2e-3, seed=5)
+    fs = resolve_faults(weights, chip, fm)
+    assert fs.n_stuck > 0
+    oracle = ref.run_reference(cg, weights, biases, quant, inputs,
+                               faults=fs)
+    res = partition(cg, chip, "dp", CostParams(batch=2))
+    model = compile_model(res, batch=2, quant=quant, strict_lmem=True)
+    img = model.build_gmem_image(fs.corrupt_weights(weights), biases,
+                                 inputs)
+    rep = Simulator(chip, model.isa, mode="func").run_model(
+        model, gmem_image=img)
+    last = len(cg) - 1
+    for s in range(2):
+        addr, nb = model.output_addr(last, s)
+        got = rep.gmem[addr - 0x10000000: addr - 0x10000000 + nb]
+        want = oracle[last][s].reshape(-1)
+        np.testing.assert_array_equal(got, want.view(np.int8)[:nb])
+
+
+def test_transient_faults_deterministic_per_sample():
+    cg, weights, biases, inputs, quant = _tiny_setup()
+    chip = default_chip()
+    fm = FaultModel(transient_rate=1e-3, seed=7)
+    fs = resolve_faults(weights, chip, fm)
+    a = ref.run_reference(cg, weights, biases, quant, inputs, faults=fs)
+    b = ref.run_reference(cg, weights, biases, quant, inputs, faults=fs)
+    clean = ref.run_reference(cg, weights, biases, quant, inputs)
+    for gid in a:
+        np.testing.assert_array_equal(a[gid], b[gid])
+    assert any(not np.array_equal(a[g], clean[g]) for g in a)
+
+
+def test_physical_iss_hook_deterministic():
+    """Physical (core, mg) stuck bits at CIM_LOAD: same seed -> same
+    corrupted outputs; rate=0 -> bit-identical to the fault-free run."""
+    cg, weights, biases, inputs, quant = _tiny_setup()
+    chip = default_chip(n_cores=8, mesh_cols=4)
+    res = partition(cg, chip, "dp", CostParams(batch=2))
+    model = compile_model(res, batch=2, quant=quant, strict_lmem=True)
+    img = model.build_gmem_image(weights, biases, inputs)
+
+    def run(faults):
+        sim = Simulator(chip, model.isa, mode="func", faults=faults)
+        return sim.run_model(model, gmem_image=img)
+
+    base = run(None)
+    null = run(PhysicalCimFaults(chip, FaultModel(rate=0.0)))
+    np.testing.assert_array_equal(base.gmem, null.gmem)
+    fm = FaultModel(rate=5e-3, seed=13)
+    a = run(PhysicalCimFaults(chip, fm))
+    b = run(PhysicalCimFaults(chip, fm))
+    np.testing.assert_array_equal(a.gmem, b.gmem)
+    assert not np.array_equal(a.gmem, base.gmem)
+    # timing never depends on data corruption
+    assert a.cycles == base.cycles
+
+
+def test_gmem_corruption_deterministic():
+    img = RNG.integers(-128, 128, 1 << 14).astype(np.int8)
+    fm = FaultModel(gmem_rate=1e-3, seed=2)
+    a = corrupt_gmem(img, fm)
+    b = corrupt_gmem(img, fm)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, img)
+    # single-bit flips only: hamming distance per word <= 1
+    xor = (a ^ img).view(np.uint32)
+    bits = np.unpackbits(xor.view(np.uint8)).reshape(-1, 32).sum(1)
+    assert bits.max() == 1
+
+
+# ---------------------------------------------------------------------------
+# mitigation: residual rates down, machine-model costs up
+# ---------------------------------------------------------------------------
+
+
+def test_residual_rates_and_protection_costs():
+    macro = default_chip().core.cim.macro
+    p = 1e-3
+    none = ProtectionConfig()
+    assert residual_rate(p, none, macro) == p
+    for prot in (ProtectionConfig(tmr=True), ProtectionConfig(ecc=True),
+                 ProtectionConfig(spare_rows=4)):
+        assert 0.0 <= residual_rate(p, prot, macro) < p
+    # spares protect weights, not the datapath
+    sp = ProtectionConfig(spare_rows=4)
+    assert residual_rate(p, sp, macro, transient=True) == p
+
+    plain = machine_for(default_chip())
+    hard = machine_for(default_chip(protection=ProtectionConfig(
+        ecc=True, spare_rows=4, tmr=True)))
+    assert hard.weight_load_factor > plain.weight_load_factor == 1.0
+    assert hard.protection_area_factor > 1.0
+    assert hard.mvm_fill_beats > plain.mvm_fill_beats
+    # unprotected chip: bit-identical machine model (no silent drift)
+    assert plain.weight_load_cycles(128) == \
+        machine_for(default_chip()).weight_load_cycles(128)
+
+    fm = FaultModel(rate=p, transient_rate=p)
+    mit = fm.mitigated(hard.chip)
+    assert mit.rate < fm.rate and mit.transient_rate < fm.transient_rate
+
+
+def test_degradation_curve_monotone_anchor():
+    cg = workloads.build("tiny_cnn", res=8, c=8).condense()
+    rows = degradation_curve(cg, default_chip(), [0.0, 0.02], batch=2)
+    assert rows[0]["n_stuck"] == 0 and rows[0]["ber"] == 0.0
+    assert rows[0]["top1_agreement"] == 1.0
+    assert rows[1]["n_stuck"] > 0 and rows[1]["ber"] > 0.0
+    # deterministic: same call, same numbers
+    again = degradation_curve(cg, default_chip(), [0.0, 0.02], batch=2)
+    assert rows == again
+
+
+# ---------------------------------------------------------------------------
+# mesh failover
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_mesh_replan_conserves_work():
+    cg = workloads.build("transformer").condense()
+    chip = default_chip()
+    sysc = SystemConfig.mesh(4).degrade(failed_chips=(2,))
+    assert sysc.alive_slots == (0, 1, 3) and sysc.n_alive == 3
+    plan = split_pipeline(cg, chip, sysc)
+    assert plan.total_macs() == cg.total_macs
+    assert all(s.mesh_slot != 2 for s in plan.slices)
+    covered = [g for s in plan.slices for g in s.gids]
+    assert covered == list(range(len(cg)))
+
+
+def test_degraded_mesh_func_bit_exact_tiny_cnn():
+    """1 failed chip of a 2x2 mesh: the re-planned pipeline still runs
+    func-mode bit-exact against the single-chip oracle."""
+    sysc = SystemConfig.mesh(4).degrade(failed_chips=(1,))
+    art = flow.compile("tiny_cnn", default_chip(), CompileOptions(
+        fidelity="func", batch=2, system=sysc))
+    assert art.n_chips <= 3
+    cg = art.cg
+    weights, biases, inputs = ref.random_init(cg, batch=2, seed=17)
+    quant = ref.auto_quant(cg, weights, biases, inputs)
+    got = art.run_func(weights, biases, inputs, quant=quant)
+    oracle = ref.run_reference(cg, weights, biases, quant, inputs)
+    last = len(cg) - 1
+    for s in range(2):
+        np.testing.assert_array_equal(got.final[s],
+                                      oracle[last][s].reshape(-1))
+    # degraded-mode throughput is reported on the system report
+    rep = flow.compile("tiny_cnn", default_chip(), CompileOptions(
+        fidelity="analytic", batch=2, system=sysc)).evaluate()
+    assert rep.degraded and rep.n_failed_chips == 1
+    assert rep.throughput_sps > 0
+
+
+def test_failed_link_routes_around():
+    sysc = SystemConfig(chips_x=2, chips_y=2,
+                        failed_links=((0, 1),))
+    # snake order on 2x2: 0-1 adjacent; with the link dead the route
+    # detours through the other row
+    assert sysc.hops(0, 1) == 3
+    with pytest.raises(ValueError):
+        SystemConfig(chips_x=1, chips_y=1, failed_chips=(0,))
+
+
+# ---------------------------------------------------------------------------
+# serving degradation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def serve_table():
+    return StepCostTable(ServeModelCfg(), fidelity="analytic")
+
+
+def test_serving_default_path_unchanged(serve_table):
+    tr = poisson_trace(rate=8.0, n=40, seed=0)
+    m = ServeSim(serve_table, make_policy("continuous", 8)).run(tr)
+    for k in ("shed_requests", "timeout_requests", "retries",
+              "goodput_tok_s"):
+        assert k not in m
+    # degraded config with unreachable limits: identical core metrics
+    m2 = ServeSim(serve_table, make_policy("continuous", 8),
+                  deadline_s=1e9, max_queue=10 ** 9).run(tr)
+    assert m2["shed_requests"] == 0 and m2["timeout_requests"] == 0
+    for k in m:
+        assert m[k] == m2[k]
+
+
+def test_serving_degradation_counters_byte_stable(serve_table):
+    # well over the ~90k req/s prefill capacity of the analytic table
+    hot = poisson_trace(rate=300000.0, n=200, seed=1)
+    kw = dict(deadline_s=0.002, max_queue=4, max_retries=2,
+              retry_backoff_s=0.0005)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        a = ServeSim(serve_table, make_policy("continuous", 8),
+                     **kw).run(hot)
+        b = ServeSim(serve_table, make_policy("continuous", 8),
+                     **kw).run(hot)
+    assert a["shed_requests"] > 0
+    assert a["timeout_requests"] > 0
+    assert a["retries"] > 0
+    assert a["goodput_tok_s"] < a["throughput_tok_s"]
+    assert a["requests"] + a["shed_requests"] == len(hot)
+    assert metrics_json(a) == metrics_json(b)
+    json.loads(metrics_json(a))   # stays valid canonical JSON
+
+
+def test_serving_saturation_warning_and_cap(serve_table):
+    hot = poisson_trace(rate=300000.0, n=100, seed=2)
+    sim = ServeSim(serve_table, make_policy("continuous", 8))
+    with pytest.warns(RuntimeWarning, match="saturated"):
+        sim.run(hot)
+    with pytest.raises(RuntimeError, match="max_sim_s"):
+        sim.run(hot, max_sim_s=1e-4)
