@@ -1,29 +1,48 @@
-"""Serving benchmark: committed trace replay + latency golden.
+"""Serving benchmark: committed trace replay, engine equivalence,
+prefill-policy latency, and the large-trace replay gate.
 
-Replays the committed 200-request Poisson trace
-(``benchmarks/serving_trace.json``, rate 5000 req/s, seed 0 — tuned to
-~50% of the default chip's decode capacity so batching policy visibly
-moves the tail) through ``repro.serve`` at trace fidelity under both
-batching policies, and records throughput plus the latency percentiles.
+Four sections (schema 2):
 
-The committed golden is ``BENCH_serving.json`` at the repo root.  The
-simulator touches no wall clock — every recorded number derives from
-deterministic cycle counts — so ``--smoke`` fails on ANY drift of
-throughput or percentiles (cost-model/codegen change: regenerate with
-``--update-golden`` and commit the diff).  ``--smoke`` additionally
-asserts the serving invariant the ISSUE pins: continuous batching
-beats static on p99 per-token latency at equal delivered throughput.
+* **policies** — replays the committed 200-request Poisson trace
+  (``benchmarks/serving_trace.json``, rate 5000 req/s, seed 0 — tuned
+  to ~50% of the default chip's decode capacity so batching policy
+  visibly moves the tail) through ``repro.serve`` at trace fidelity
+  under both batching policies; throughput and latency percentiles are
+  gated exactly against the committed golden.
+* **equivalence** — the array-batched engine must produce metrics JSON
+  byte-identical to the reference event engine (modulo the
+  self-describing ``engine`` key) on the committed trace under both
+  policies AND under the degradation config from ``BENCH_faults.json``
+  (deadline + shedding + retries).
+* **prefill** — chunked and batched prefill vs FIFO batch-1 on an
+  over-capacity prompt-heavy workload (synthetic step costs); gates
+  the headline invariant that chunked prefill beats FIFO batch-1 on
+  p99 TTFT when the prefill engine saturates, plus the exact latency
+  numbers.
+* **large** — a 120k-request over-capacity trace with long generation
+  lengths, pinned by the sha256 of its canonical JSON rather than
+  committed (~13 MB) bytes; the trace generators are bit-reproducible
+  so the digest IS the trace.  ``--smoke`` measures wall time
+  (interleaved min-of-reps) and gates two floors that hold on any
+  machine: the array engine must replay the full trace in seconds
+  (ceiling ``LARGE_ARRAY_CEIL_S``) and must beat the event engine by
+  ``SPEEDUP_FLOOR``x on a 20k-request prefix (a same-machine ratio, so
+  no absolute-speed assumption).  Wall-clock numbers are printed and
+  written to ``--json`` but never stored in the golden.
 
     PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
-        [--update-golden] [--make-trace] [--json PATH]
+        [--update-golden] [--make-trace] [--skip-large] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import sys
+import time
+import warnings
 from typing import Dict, List, Optional
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -39,6 +58,37 @@ MODEL_KW = dict(n_layers=2, d_model=128, n_heads=4, vocab=256,
                 max_prompt=64, max_new=64)
 FIDELITY = "trace"
 MAX_BATCH = 8
+
+# degradation config mirrored from benchmarks/bench_faults.py — the
+# equivalence section must cover the shed/timeout/retry paths too
+FAULT_RATE = 300000.0
+FAULT_REQUESTS = 200
+FAULT_SEED = 1
+FAULT_KW = dict(deadline_s=0.002, max_queue=4, max_retries=2,
+                retry_backoff_s=0.0005)
+
+# large-trace replay: over-capacity, long generations, pinned by hash
+LARGE_REQUESTS = 120_000
+LARGE_RATE = 5000.0
+LARGE_SEED = 9
+LARGE_LEN_KW = dict(min_prompt=4, max_prompt=64, min_new=16,
+                    max_new=1024)
+SPEEDUP_REQUESTS = 20_000      # event-engine comparison prefix
+SPEEDUP_FLOOR = 20.0           # array/event wall-time ratio, same box
+LARGE_ARRAY_CEIL_S = 30.0      # full 120k replay must stay in seconds
+
+# prefill-policy section: prompts all land in the top bucket but
+# average ~75% of it, so chunked prefill (priced per actual token)
+# sustains load that saturates the bucket-padded FIFO path; decode is
+# light (short gens) and the batch is wide so chunked prompts are not
+# starved of decode slots
+PREFILL_RATE = 9000.0
+PREFILL_REQUESTS = 3000
+PREFILL_SEED = 11
+PREFILL_LEN_KW = dict(min_prompt=33, max_prompt=64, min_new=2,
+                      max_new=8)
+PREFILL_MAX_BATCH = 16
+PREFILL_CHUNK_TOKENS = 64
 
 # metric keys gated against the golden (exact match — deterministic)
 _GATED = ("tokens", "throughput_tok_s", "throughput_req_s",
@@ -56,18 +106,121 @@ def make_trace() -> None:
           f"rate {TRACE_RATE} req/s, seed {TRACE_SEED})")
 
 
+def _synthetic_table(max_new: int):
+    """Deterministic step costs without the compiler — the large and
+    prefill sections price millions of iterations, where the analytic
+    table build (not the replay) would dominate."""
+    from repro.serve import ServeModelCfg, StepCostTable
+    cfg = ServeModelCfg(max_prompt=64, max_new=max_new)
+    pb = [1, 2, 4, 8, 16, 32, 64]
+    db, b = [], 1
+    while b < cfg.max_seq:
+        db.append(b)
+        b *= 2
+    db.append(cfg.max_seq)
+    return StepCostTable.from_costs(
+        cfg,
+        prefill_s={b: 2e-6 * b for b in pb},
+        decode_base_s={b: 30e-6 + 0.01e-6 * b for b in db},
+        decode_per_seq_s={b: 2e-6 + 0.002e-6 * b for b in db},
+        prefill_base_s={b: 1.5e-6 * b for b in pb},
+        prefill_per_seq_s={b: 0.5e-6 * b for b in pb},
+    )
+
+
+def _prefill_table():
+    """Prompt-heavy regime: prefill is the expensive stage (2 us per
+    bucketed token) while decode steps are light, so the comparison
+    isolates the prefill policies — chunked prefill serializes prompt
+    chunks with decode iterations, so a decode-bound table would
+    measure the decode engine, not the policy."""
+    from repro.serve import ServeModelCfg, StepCostTable
+    cfg = ServeModelCfg(max_prompt=64,
+                        max_new=PREFILL_LEN_KW["max_new"])
+    pb = [1, 2, 4, 8, 16, 32, 64]
+    db, b = [], 1
+    while b < cfg.max_seq:
+        db.append(b)
+        b *= 2
+    db.append(cfg.max_seq)
+    return StepCostTable.from_costs(
+        cfg,
+        prefill_s={b: 2e-6 * b for b in pb},
+        decode_base_s={b: 10e-6 for b in db},
+        decode_per_seq_s={b: 1e-6 for b in db},
+        prefill_base_s={b: 1.5e-6 * b for b in pb},
+        prefill_per_seq_s={b: 0.5e-6 * b for b in pb},
+    )
+
+
+def _large_trace():
+    from repro.serve import poisson_trace
+    return poisson_trace(LARGE_RATE, LARGE_REQUESTS, seed=LARGE_SEED,
+                         **LARGE_LEN_KW)
+
+
+def _trace_sha256(requests) -> str:
+    blob = json.dumps(
+        [[r.rid, r.t_arrive, r.prompt_len, r.gen_len]
+         for r in requests]).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _run(table, trace, policy="continuous", max_batch=MAX_BATCH,
+         **kw) -> Dict:
+    from repro.serve import ServeSim, make_policy
+    sim = ServeSim(table, make_policy(policy, max_batch), **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        return sim.run(trace)
+
+
+def _equiv(table, trace, policy="continuous", **kw) -> bool:
+    """True iff event and array metrics JSON agree byte-for-byte
+    (modulo the self-describing ``engine`` key)."""
+    from repro.serve import metrics_json
+    out = {}
+    for eng in ("event", "array"):
+        m = dict(_run(table, trace, policy, engine=eng, **kw))
+        m.pop("engine")
+        out[eng] = metrics_json(m)
+    return out["event"] == out["array"]
+
+
 def bench_doc() -> Dict:
-    from repro.serve import (ServeModelCfg, ServeSim, StepCostTable,
-                             load_trace, make_policy)
+    from repro.serve import (ServeModelCfg, StepCostTable, load_trace,
+                             poisson_trace)
     cfg = ServeModelCfg(**MODEL_KW)
     table = StepCostTable(cfg, fidelity=FIDELITY)
     trace = load_trace(TRACE_PATH)
     policies: Dict[str, Dict] = {}
     for name in ("static", "continuous"):
-        sim = ServeSim(table, make_policy(name, MAX_BATCH))
-        policies[name] = sim.run(trace)
+        policies[name] = _run(table, trace, name)
+
+    fault_trace = poisson_trace(FAULT_RATE, FAULT_REQUESTS,
+                                seed=FAULT_SEED)
+    equivalence = {
+        "static": _equiv(table, trace, "static"),
+        "continuous": _equiv(table, trace, "continuous"),
+        "degraded": _equiv(table, fault_trace, "continuous",
+                           **FAULT_KW),
+    }
+
+    ptable = _prefill_table()
+    ptrace = poisson_trace(PREFILL_RATE, PREFILL_REQUESTS,
+                           seed=PREFILL_SEED, **PREFILL_LEN_KW)
+    prefill: Dict[str, Dict] = {}
+    for pol in ("fifo", "batched", "chunked"):
+        m = _run(ptable, ptrace, prefill_policy=pol,
+                 max_batch=PREFILL_MAX_BATCH,
+                 chunk_tokens=PREFILL_CHUNK_TOKENS)
+        prefill[pol] = {"ttft_s": m["ttft_s"], "tpot_s": m["tpot_s"],
+                        "throughput_tok_s": m["throughput_tok_s"],
+                        "tokens": m["tokens"]}
+
+    large = _large_trace()
     return {
-        "schema": 1,
+        "schema": 2,
         "chip": "default",
         "fidelity": FIDELITY,
         "max_batch": MAX_BATCH,
@@ -76,6 +229,54 @@ def bench_doc() -> Dict:
                   "rate": TRACE_RATE, "requests": TRACE_REQUESTS,
                   "seed": TRACE_SEED},
         "policies": policies,
+        "equivalence": equivalence,
+        "prefill": {
+            "rate": PREFILL_RATE, "requests": PREFILL_REQUESTS,
+            "seed": PREFILL_SEED, **PREFILL_LEN_KW,
+            "max_batch": PREFILL_MAX_BATCH,
+            "chunk_tokens": PREFILL_CHUNK_TOKENS,
+            "policies": prefill,
+        },
+        "large": {
+            "requests": LARGE_REQUESTS, "rate": LARGE_RATE,
+            "seed": LARGE_SEED, **LARGE_LEN_KW,
+            "trace_sha256": _trace_sha256(large),
+            "decode_iterations":
+                _run(_synthetic_table(LARGE_LEN_KW["max_new"]),
+                     large)["decode_iterations"],
+        },
+    }
+
+
+def measure_large(doc: Dict) -> Dict:
+    """Wall-clock section (never golden-gated): interleaved min-of-reps
+    for the array/event ratio on the speedup prefix, plus the full
+    large-trace array replay time."""
+    table = _synthetic_table(LARGE_LEN_KW["max_new"])
+    large = _large_trace()
+    if _trace_sha256(large) != doc["large"]["trace_sha256"]:
+        raise RuntimeError("large trace drifted from pinned sha256")
+    prefix = large[:SPEEDUP_REQUESTS]
+
+    def clock(engine, trace) -> float:
+        t0 = time.perf_counter()
+        _run(table, trace, engine=engine)
+        return time.perf_counter() - t0
+
+    # interleave so machine noise hits both engines alike; keep mins
+    ar, ev = [], []
+    for _ in range(2):
+        ar.append(clock("array", prefix))
+        ev.append(clock("event", prefix))
+    ar.append(clock("array", prefix))
+    full = min(clock("array", large) for _ in range(2))
+    return {
+        "speedup_requests": SPEEDUP_REQUESTS,
+        "array_s": min(ar),
+        "event_s": min(ev),
+        "speedup": min(ev) / min(ar),
+        "full_requests": LARGE_REQUESTS,
+        "full_array_s": full,
     }
 
 
@@ -88,6 +289,21 @@ def report(doc: Dict) -> str:
             f"ttft p99={m['ttft_s']['p99'] * 1e3:7.3f}ms  "
             f"tpot p99={m['tpot_s']['p99'] * 1e6:7.1f}us  "
             f"e2e p99={m['e2e_s']['p99'] * 1e3:7.3f}ms")
+    eq = doc["equivalence"]
+    out.append("engine equivalence (array vs event, byte-exact): "
+               + ", ".join(f"{k}={'OK' if v else 'FAIL'}"
+                           for k, v in sorted(eq.items())))
+    out.append("prefill policies @ over-capacity "
+               f"(rate {doc['prefill']['rate']:g}/s):")
+    for pol, m in doc["prefill"]["policies"].items():
+        out.append(
+            f"  {pol:<8s} ttft p50={m['ttft_s']['p50'] * 1e3:8.3f}ms "
+            f"p99={m['ttft_s']['p99'] * 1e3:8.3f}ms  "
+            f"tok/s={m['throughput_tok_s']:9.0f}")
+    lg = doc["large"]
+    out.append(f"large trace: {lg['requests']} requests, "
+               f"{lg['decode_iterations']} decode iterations, "
+               f"sha256={lg['trace_sha256'][:12]}…")
     return "\n".join(out)
 
 
@@ -113,6 +329,40 @@ def smoke_drift(doc: Dict, golden: Dict) -> List[str]:
                 if _round(m[fam][q]) != _round(g[fam][q]):
                     drift.append(
                         f"{name}.{fam}.{q}: {g[fam][q]} -> {m[fam][q]}")
+    # engine equivalence is not a drift check — it must simply hold
+    for k, ok in sorted(doc["equivalence"].items()):
+        if not ok:
+            drift.append(f"equivalence.{k}: array engine diverged "
+                         f"from the event engine")
+    # prefill latency numbers are deterministic: gate them exactly
+    for pol in sorted(set(doc["prefill"]["policies"])
+                      | set(golden["prefill"]["policies"])):
+        m = doc["prefill"]["policies"].get(pol)
+        g = golden["prefill"]["policies"].get(pol)
+        if m is None or g is None:
+            drift.append(f"prefill.{pol}: "
+                         f"{'missing' if m is None else 'new'}")
+            continue
+        for q in ("p50", "p99"):
+            if _round(m["ttft_s"][q]) != _round(g["ttft_s"][q]):
+                drift.append(f"prefill.{pol}.ttft.{q}: "
+                             f"{g['ttft_s'][q]} -> {m['ttft_s'][q]}")
+    # the headline prefill invariant, independent of the golden
+    pf = doc["prefill"]["policies"]
+    if pf["chunked"]["ttft_s"]["p99"] >= pf["fifo"]["ttft_s"]["p99"]:
+        drift.append(
+            f"chunked prefill p99 ttft {pf['chunked']['ttft_s']['p99']}"
+            f" no longer beats fifo {pf['fifo']['ttft_s']['p99']}")
+    if doc["large"]["trace_sha256"] != golden["large"]["trace_sha256"]:
+        drift.append("large.trace_sha256: pinned trace drifted "
+                     f"({golden['large']['trace_sha256'][:12]}… -> "
+                     f"{doc['large']['trace_sha256'][:12]}…)")
+    if doc["large"]["decode_iterations"] != \
+            golden["large"]["decode_iterations"]:
+        drift.append(
+            f"large.decode_iterations: "
+            f"{golden['large']['decode_iterations']} -> "
+            f"{doc['large']['decode_iterations']}")
     # the serving invariant itself, independent of the golden
     ms, mc = doc["policies"]["static"], doc["policies"]["continuous"]
     if mc["throughput_tok_s"] < 0.95 * ms["throughput_tok_s"]:
@@ -132,6 +382,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help=f"rewrite {GOLDEN_PATH}")
     ap.add_argument("--make-trace", action="store_true",
                     help=f"regenerate {TRACE_PATH}")
+    ap.add_argument("--skip-large", action="store_true",
+                    help="skip the wall-clock large-trace section")
     ap.add_argument("--json", default="results/bench_serving.json",
                     help="also write the measured doc here "
                          "('' to skip)")
@@ -148,10 +400,20 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     doc = bench_doc()
     print(report(doc))
+    timing = None
+    if not args.skip_large:
+        timing = measure_large(doc)
+        print(f"large-trace replay: array {timing['array_s']:.2f}s vs "
+              f"event {timing['event_s']:.2f}s on "
+              f"{timing['speedup_requests']} requests -> "
+              f"{timing['speedup']:.1f}x; full "
+              f"{timing['full_requests']}-request trace in "
+              f"{timing['full_array_s']:.2f}s (array)")
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1, sort_keys=True)
+            json.dump(dict(doc, timing=timing), f, indent=1,
+                      sort_keys=True)
         print(f"wrote {args.json}")
     if args.update_golden:
         with open(GOLDEN_PATH, "w") as f:
@@ -168,6 +430,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                   f"(generate with --update-golden)")
             return 1
         drift = smoke_drift(doc, golden)
+        if timing is not None:
+            if timing["speedup"] < SPEEDUP_FLOOR:
+                drift.append(
+                    f"array engine speedup {timing['speedup']:.1f}x "
+                    f"fell below the {SPEEDUP_FLOOR:.0f}x floor "
+                    f"(array {timing['array_s']:.2f}s, event "
+                    f"{timing['event_s']:.2f}s)")
+            if timing["full_array_s"] > LARGE_ARRAY_CEIL_S:
+                drift.append(
+                    f"full {LARGE_REQUESTS}-request replay took "
+                    f"{timing['full_array_s']:.1f}s "
+                    f"(> {LARGE_ARRAY_CEIL_S:.0f}s ceiling)")
         if drift:
             print("SERVING BENCH DRIFT vs committed golden:")
             for d in drift:

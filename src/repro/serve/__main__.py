@@ -43,6 +43,29 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=tuple(sorted(POLICIES)) + ("both",),
                    default="continuous")
     p.add_argument("--max-batch", type=int, default=8)
+    p.add_argument("--engine", choices=("event", "array"),
+                   default="array",
+                   help="replay engine: the array-batched engine "
+                        "(default; orders of magnitude faster) or the "
+                        "reference discrete-event loop — both produce "
+                        "byte-identical metrics JSON")
+    p.add_argument("--prefill-policy",
+                   choices=("fifo", "batched", "chunked"),
+                   default="fifo",
+                   help="fifo: batch-1 prompts back to back; batched: "
+                        "FCFS prefill batches up to --prefill-max-batch; "
+                        "chunked: prompt chunks co-scheduled into decode "
+                        "iterations under a --chunk-tokens budget "
+                        "(batched/chunked need --engine array)")
+    p.add_argument("--prefill-max-batch", type=int, default=8,
+                   help="batch cap for --prefill-policy batched")
+    p.add_argument("--chunk-tokens", type=int, default=32,
+                   help="per-iteration token budget for "
+                        "--prefill-policy chunked")
+    p.add_argument("--streaming-percentiles", action="store_true",
+                   help="estimate latency percentiles with the P2 "
+                        "streaming algorithm (O(1) memory; approximate) "
+                        "instead of the exact sorted sample")
     p.add_argument("--kv-frac", type=float, default=0.5,
                    help="fraction of global memory reserved for KV")
     p.add_argument("--deadline-s", type=float, default=None,
@@ -119,7 +142,8 @@ def _trace(args: argparse.Namespace) -> List[Request]:
 def _report(m: Dict[str, Any]) -> str:
     t, p = m["ttft_s"], m["tpot_s"]
     s = (
-        f"policy={m['policy']:<11s} req={m['requests']} "
+        f"policy={m['policy']:<11s} engine={m['engine']}/"
+        f"{m['prefill_policy']} req={m['requests']} "
         f"tok/s={m['throughput_tok_s']:8.1f} "
         f"ttft p50={t['p50'] * 1e3:7.2f}ms p95={t['p95'] * 1e3:7.2f}ms "
         f"p99={t['p99'] * 1e3:7.2f}ms  "
@@ -156,12 +180,22 @@ def main(argv: List[str] | None = None) -> int:
         else [args.policy]
     results: Dict[str, Any] = {}
     for name in policies:
-        sim = ServeSim(table, make_policy(name, args.max_batch),
-                       kv_frac=args.kv_frac,
-                       deadline_s=args.deadline_s,
-                       max_queue=args.max_queue,
-                       max_retries=args.max_retries,
-                       retry_backoff_s=args.retry_backoff_s)
+        try:
+            sim = ServeSim(table, make_policy(name, args.max_batch),
+                           kv_frac=args.kv_frac,
+                           deadline_s=args.deadline_s,
+                           max_queue=args.max_queue,
+                           max_retries=args.max_retries,
+                           retry_backoff_s=args.retry_backoff_s,
+                           engine=args.engine,
+                           prefill_policy=args.prefill_policy,
+                           prefill_max_batch=args.prefill_max_batch,
+                           chunk_tokens=args.chunk_tokens,
+                           percentile_mode=(
+                               "streaming" if args.streaming_percentiles
+                               else "exact"))
+        except ValueError as e:
+            raise SystemExit(f"error: {e}") from None
         try:
             m = sim.run(requests, max_sim_s=args.max_sim_s)
         except RuntimeError as e:

@@ -15,6 +15,14 @@ footprint (prompt + all generated tokens) at admission, so a running
 request can never be evicted mid-generation.  Admission is strict
 FCFS — the scan stops at the first request that does not fit, which
 trades a little utilisation for freedom from starvation.
+
+Contract: :meth:`Batcher.admit` must be **pure** — it returns the
+prefix of ``queue`` to admit without mutating ``active``, ``queue``,
+or itself.  The array replay engine (:mod:`repro.serve.engine`)
+relies on this: during horizon planning it calls ``admit``
+speculatively at simulated boundaries and discards the result when a
+tail arrival invalidates the horizon.  A stateful policy would
+double-count those probe calls.
 """
 from __future__ import annotations
 
@@ -41,6 +49,9 @@ class Batcher:
     def admit(self, active: Sequence[object],
               queue: Sequence[_HasFootprint],
               kv_free: int) -> List[_HasFootprint]:
+        """Return the prefix of ``queue`` to admit.  Must be pure —
+        the array engine probes boundaries speculatively and may
+        discard the returned admission without applying it."""
         raise NotImplementedError
 
     def _take_fcfs(self, queue: Sequence[_HasFootprint], slots: int,

@@ -31,17 +31,25 @@ from __future__ import annotations
 
 import heapq
 import json
+import math
 import random
 import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from .engine import run_array
 from .metrics import RequestRecord, summarize
 from .policy import Batcher
+from .rng import VecMT, uniform_randbelow_batch
 from .workload import StepCostTable
 
-__all__ = ["Request", "poisson_trace", "bursty_trace", "load_trace",
-           "save_trace", "ServeSim"]
+__all__ = ["Request", "poisson_trace", "poisson_trace_arrays",
+           "bursty_trace", "load_trace", "save_trace", "ServeSim"]
+
+_ENGINES = ("event", "array")
+_PREFILL_POLICIES = ("fifo", "batched", "chunked")
 
 
 @dataclass(frozen=True)
@@ -52,10 +60,15 @@ class Request:
     gen_len: int
 
 
-def poisson_trace(rate: float, n: int, seed: int = 0,
-                  min_prompt: int = 4, max_prompt: int = 64,
-                  min_new: int = 4, max_new: int = 64) -> List[Request]:
-    """Poisson arrivals at ``rate`` req/s with uniform length draws."""
+def _poisson_trace_scalar(rate: float, n: int, seed: int = 0,
+                          min_prompt: int = 4, max_prompt: int = 64,
+                          min_new: int = 4,
+                          max_new: int = 64) -> List[Request]:
+    """Reference per-request loop (the committed traces' definition).
+
+    :func:`poisson_trace` must match this bit-for-bit; the equivalence
+    suite pins it.
+    """
     if rate <= 0 or n < 1:
         raise ValueError("rate must be > 0 and n >= 1")
     rng = random.Random(seed)
@@ -70,17 +83,51 @@ def poisson_trace(rate: float, n: int, seed: int = 0,
     return out
 
 
-def bursty_trace(rate: float, n: int, seed: int = 0,
-                 burst: float = 4.0, period_s: float = 2.0,
-                 duty: float = 0.3, min_prompt: int = 4,
-                 max_prompt: int = 64, min_new: int = 4,
-                 max_new: int = 64) -> List[Request]:
-    """On/off-modulated Poisson arrivals with the same mean ``rate``.
-
-    During the on-phase (fraction ``duty`` of each ``period_s`` cycle)
-    arrivals run ``burst``× hotter; the off-phase rate is scaled down
-    so the long-run average stays at ``rate``.
+def poisson_trace_arrays(
+        rate: float, n: int, seed: int = 0,
+        min_prompt: int = 4, max_prompt: int = 64,
+        min_new: int = 4,
+        max_new: int = 64) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """SoA form of :func:`poisson_trace`: ``(t_arrive, prompt_len,
+    gen_len)`` numpy arrays, skipping :class:`Request` materialization
+    (which dominates at million-request scale).  Values are
+    bit-identical to the :class:`Request` list.
     """
+    if rate <= 0 or n < 1:
+        raise ValueError("rate must be > 0 and n >= 1")
+    mt = VecMT(seed)
+    u, (p, g) = uniform_randbelow_batch(
+        mt, n, (max_prompt - min_prompt + 1, max_new - min_new + 1))
+    gaps = [-math.log(1.0 - x) / rate for x in u.tolist()]
+    t = np.cumsum(np.asarray(gaps))
+    return t, p + min_prompt, g + min_new
+
+
+def poisson_trace(rate: float, n: int, seed: int = 0,
+                  min_prompt: int = 4, max_prompt: int = 64,
+                  min_new: int = 4, max_new: int = 64) -> List[Request]:
+    """Poisson arrivals at ``rate`` req/s with uniform length draws.
+
+    Bit-identical to :func:`_poisson_trace_scalar` (same seed, same
+    bytes on disk) but draws the whole word stream through
+    :class:`~repro.serve.rng.VecMT` in numpy batches.  The only scalar
+    stage left is the ``math.log`` map for the exponential gaps —
+    numpy's SIMD ``log`` differs from libm by ~1 ulp on a fraction of
+    inputs, which would change trace bytes.
+    """
+    t, p, g = poisson_trace_arrays(rate, n, seed, min_prompt,
+                                   max_prompt, min_new, max_new)
+    return [Request(rid=i, t_arrive=ti, prompt_len=pi, gen_len=gi)
+            for i, (ti, pi, gi) in enumerate(zip(
+                t.tolist(), p.tolist(), g.tolist()))]
+
+
+def _bursty_trace_scalar(rate: float, n: int, seed: int = 0,
+                         burst: float = 4.0, period_s: float = 2.0,
+                         duty: float = 0.3, min_prompt: int = 4,
+                         max_prompt: int = 64, min_new: int = 4,
+                         max_new: int = 64) -> List[Request]:
+    """Reference per-request loop for :func:`bursty_trace`."""
     if not 0.0 < duty < 1.0:
         raise ValueError("duty must be in (0, 1)")
     if burst * duty >= 1.0 + duty:
@@ -101,7 +148,10 @@ def bursty_trace(rate: float, n: int, seed: int = 0,
             # keeps the draw count deterministic per accepted arrival)
             edge = (duty if phase < duty else 1.0) * period_s \
                 - (t % period_s)
-            if dt <= edge or edge <= 0:
+            # t + edge == t: t sits within one ulp of the phase edge,
+            # so stepping to the edge cannot advance the clock — accept
+            # the draw at the boundary rate or the walk spins forever
+            if dt <= edge or edge <= 0 or t + edge == t:
                 t += dt
                 break
             t += edge
@@ -109,6 +159,87 @@ def bursty_trace(rate: float, n: int, seed: int = 0,
             rid=i, t_arrive=t,
             prompt_len=rng.randint(min_prompt, max_prompt),
             gen_len=rng.randint(min_new, max_new)))
+    return out
+
+
+def bursty_trace(rate: float, n: int, seed: int = 0,
+                 burst: float = 4.0, period_s: float = 2.0,
+                 duty: float = 0.3, min_prompt: int = 4,
+                 max_prompt: int = 64, min_new: int = 4,
+                 max_new: int = 64) -> List[Request]:
+    """On/off-modulated Poisson arrivals with the same mean ``rate``.
+
+    During the on-phase (fraction ``duty`` of each ``period_s`` cycle)
+    arrivals run ``burst``× hotter; the off-phase rate is scaled down
+    so the long-run average stays at ``rate``.
+
+    Bit-identical to :func:`_bursty_trace_scalar`.  The phase walk is
+    sequential by construction (each arrival's rate depends on the
+    previous arrival time), so this draws the MT19937 word stream in
+    numpy batches via :class:`~repro.serve.rng.VecMT` and walks it
+    with scalar pointer arithmetic instead of one ``random.Random``
+    call per draw.
+    """
+    if not 0.0 < duty < 1.0:
+        raise ValueError("duty must be in (0, 1)")
+    if burst * duty >= 1.0 + duty:
+        # keep the off-phase rate positive
+        raise ValueError("burst too high for this duty cycle")
+    on_rate = rate * burst
+    off_rate = rate * (1.0 - burst * duty) / (1.0 - duty)
+    span_p = max_prompt - min_prompt + 1
+    span_g = max_new - min_new + 1
+    sh_p = 32 - span_p.bit_length()
+    sh_g = 32 - span_g.bit_length()
+    mt = VecMT(seed)
+    # walk the batch-generated stream as a plain int list — Python int
+    # shifts beat numpy scalar indexing in a data-dependent loop
+    words = mt.peek(8 * n + 4096).tolist()
+    nw = len(words)
+    inv53 = 1.0 / 9007199254740992.0
+    log = math.log
+    pos = 0
+    t = 0.0
+    out: List[Request] = []
+    append = out.append
+    for i in range(n):
+        while True:
+            phase = (t / period_s) % 1.0
+            on = phase < duty
+            if pos + 4 > nw:
+                words = mt.peek(nw + max(4096, nw >> 1)).tolist()
+                nw = len(words)
+            u = ((words[pos] >> 5) * 67108864.0
+                 + (words[pos + 1] >> 6)) * inv53
+            dt = -log(1.0 - u) / (on_rate if on else off_rate)
+            pos += 2
+            edge = (duty if on else 1.0) * period_s - (t % period_s)
+            # mirror the scalar loop's ulp guard: a degenerate edge
+            # step (t + edge == t) cannot advance the clock
+            if dt <= edge or edge <= 0 or t + edge == t:
+                t += dt
+                break
+            t += edge
+        while True:
+            if pos >= nw:
+                words = mt.peek(nw + max(4096, nw >> 1)).tolist()
+                nw = len(words)
+            v = words[pos] >> sh_p
+            pos += 1
+            if v < span_p:
+                break
+        p_len = min_prompt + v
+        while True:
+            if pos >= nw:
+                words = mt.peek(nw + max(4096, nw >> 1)).tolist()
+                nw = len(words)
+            v = words[pos] >> sh_g
+            pos += 1
+            if v < span_g:
+                break
+        append(Request(rid=i, t_arrive=t, prompt_len=p_len,
+                       gen_len=min_new + v))
+    mt.consume(pos)
     return out
 
 
@@ -151,6 +282,25 @@ class _Live:
 class ServeSim:
     """Replay an arrival trace against a compiled step-cost table.
 
+    Two replay engines produce byte-identical metrics JSON (modulo the
+    self-describing ``engine`` key):
+
+    * ``engine="array"`` (default) — the array-batched engine in
+      :mod:`repro.serve.engine`: per-request timelines in preallocated
+      numpy arrays, decode priced horizon-at-a-time with slice adds
+      and ``cumsum`` clock chains.  Orders of magnitude faster on long
+      traces; required for ``prefill_policy="batched"``/``"chunked"``.
+    * ``engine="event"`` — the reference discrete-event loop below,
+      one Python pass per decode iteration.  Kept as the semantic
+      oracle the equivalence suite diffs the array engine against.
+
+    ``prefill_policy`` picks how prompts reach the decode engine:
+    ``fifo`` (batch-1 back-to-back, both engines), ``batched`` (FCFS
+    batches up to ``prefill_max_batch``, priced with the table's
+    prefill affine fit), or ``chunked`` (Sarathi-style chunked prefill
+    co-scheduled into decode iterations under a ``chunk_tokens``
+    budget).
+
     ``deadline_s``/``max_queue`` switch on degraded-mode machinery:
 
     * ``max_queue`` — admission control at the prefill engine.  A
@@ -174,9 +324,38 @@ class ServeSim:
                  deadline_s: Optional[float] = None,
                  max_queue: Optional[int] = None,
                  max_retries: int = 0,
-                 retry_backoff_s: float = 0.05) -> None:
+                 retry_backoff_s: float = 0.05,
+                 engine: str = "array",
+                 prefill_policy: str = "fifo",
+                 prefill_max_batch: int = 8,
+                 chunk_tokens: int = 32,
+                 percentile_mode: str = "exact") -> None:
         self.table = table
         self.policy = policy
+        if engine not in _ENGINES:
+            raise ValueError(f"engine must be one of {_ENGINES}")
+        if prefill_policy not in _PREFILL_POLICIES:
+            raise ValueError(
+                f"prefill_policy must be one of {_PREFILL_POLICIES}")
+        if engine == "event" and prefill_policy != "fifo":
+            raise ValueError(
+                "the event engine only supports prefill_policy='fifo' "
+                "— batched/chunked prefill need engine='array'")
+        if max_queue is not None and prefill_policy != "fifo":
+            raise ValueError(
+                "max_queue admission control models the FIFO prefill "
+                "queue; it composes with prefill_policy='fifo' only")
+        if prefill_max_batch < 1:
+            raise ValueError("prefill_max_batch must be >= 1")
+        if chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        if percentile_mode not in ("exact", "streaming"):
+            raise ValueError("percentile_mode must be exact|streaming")
+        self.engine = engine
+        self.prefill_policy = prefill_policy
+        self.prefill_max_batch = prefill_max_batch
+        self.chunk_tokens = chunk_tokens
+        self.percentile_mode = percentile_mode
         if kv_capacity_bytes is None:
             kv_capacity_bytes = int(
                 table.chip.global_mem_bytes * kv_frac)
@@ -218,7 +397,7 @@ class ServeSim:
                 rid=req.rid, t_arrive=req.t_arrive,
                 prompt_len=req.prompt_len, gen_len=req.gen_len,
                 t_prefill_start=start, t_first_token=end,
-                t_complete=end, token_times=[end])
+                t_complete=end)
             out.append((end, req, rec))
         return out
 
@@ -268,7 +447,7 @@ class ServeSim:
                 rid=req.rid, t_arrive=req.t_arrive,
                 prompt_len=req.prompt_len, gen_len=req.gen_len,
                 t_prefill_start=start, t_first_token=end,
-                t_complete=end, token_times=[end])
+                t_complete=end)
             out.append((end, req, rec))
         return out, shed, retries
 
@@ -276,6 +455,12 @@ class ServeSim:
 
     def run(self, requests: Sequence[Request],
             max_sim_s: Optional[float] = None) -> Dict[str, Any]:
+        if self.engine == "array":
+            return run_array(self, requests, max_sim_s)
+        return self._run_event(requests, max_sim_s)
+
+    def _run_event(self, requests: Sequence[Request],
+                   max_sim_s: Optional[float] = None) -> Dict[str, Any]:
         if self.max_queue is not None:
             ready, shed, retries = self._run_prefill_shedding(requests)
         else:
@@ -339,7 +524,6 @@ class ServeSim:
             for live in active:
                 live.kv_len += 1
                 live.emitted += 1
-                live.rec.token_times.append(t)
                 live.rec.t_complete = t
                 if live.emitted >= live.req.gen_len:
                     done.append(live)
@@ -355,12 +539,15 @@ class ServeSim:
             "kv_peak_bytes": peak_kv,
             "decode_iterations": iterations,
             "peak_decode_batch": peak_batch,
+            "engine": "event",
+            "prefill_policy": self.prefill_policy,
         }
         self._warn_if_saturated(records, decode_busy, t)
         if self.degraded:
             extra.update(self._degradation_extra(records, shed,
                                                  retries))
-        return summarize(records, extra)
+        return summarize(records, extra,
+                         percentile_mode=self.percentile_mode)
 
     # -- degraded-mode accounting ------------------------------------
 
@@ -410,9 +597,13 @@ class ServeSim:
         return u_pre, u_dec
 
     def _warn_if_saturated(self, records: Sequence[RequestRecord],
-                           decode_busy: float, t_end: float,
-                           threshold: float = 0.95) -> None:
+                           decode_busy: float, t_end: float) -> None:
         u_pre, u_dec = self._utilization(records, decode_busy, t_end)
+        self._emit_saturation_warning(u_pre, u_dec)
+
+    def _emit_saturation_warning(self, u_pre: float, u_dec: float,
+                                 threshold: float = 0.95) -> None:
+        """Shared by both engines so the warning text stays identical."""
         if max(u_pre, u_dec) < threshold:
             return
         stage = "prefill" if u_pre >= u_dec else "decode"
@@ -423,7 +614,21 @@ class ServeSim:
             f"so queueing delay grows with trace length and latency "
             f"percentiles reflect the trace, not the system; lower "
             f"the arrival rate or enable load shedding (max_queue=)",
-            RuntimeWarning, stacklevel=3)
+            RuntimeWarning, stacklevel=4)
+
+    def _overload_msg(self, t0: float, max_sim_s: float,
+                      t: Optional[float] = None,
+                      prefill_end: Optional[float] = None) -> str:
+        """Shared by both engines so the diagnostic stays identical."""
+        where = (f"decode clock reached {t:.3f}s" if t is not None
+                 else f"prefill backlog extends past "
+                      f"{prefill_end:.3f}s")
+        return (f"serving replay exceeded max_sim_s={max_sim_s:g}s: "
+                f"{where} for a trace starting at {t0:.3f}s — the "
+                f"offered load exceeds sustainable capacity and the "
+                f"replay would run (almost) unboundedly long; lower "
+                f"the arrival rate, shrink the trace, enable load "
+                f"shedding (max_queue=), or raise max_sim_s")
 
     def _overload_diag(self, ready: Sequence[Tuple[float, Request,
                                                    RequestRecord]],
@@ -431,12 +636,7 @@ class ServeSim:
                        t: Optional[float] = None) -> str:
         recs = [rec for _, _, rec in ready]
         t0 = min(r.t_arrive for r in recs) if recs else 0.0
-        where = (f"decode clock reached {t:.3f}s" if t is not None
-                 else f"prefill backlog extends past "
-                      f"{max(e for e, _, _ in ready):.3f}s")
-        return (f"serving replay exceeded max_sim_s={max_sim_s:g}s: "
-                f"{where} for a trace starting at {t0:.3f}s — the "
-                f"offered load exceeds sustainable capacity and the "
-                f"replay would run (almost) unboundedly long; lower "
-                f"the arrival rate, shrink the trace, enable load "
-                f"shedding (max_queue=), or raise max_sim_s")
+        prefill_end = (max(e for e, _, _ in ready)
+                       if t is None else None)
+        return self._overload_msg(t0, max_sim_s, t=t,
+                                  prefill_end=prefill_end)

@@ -43,7 +43,7 @@ from .bucketing import bucket_boundaries, bucket_for
 
 __all__ = ["ServeModelCfg", "StepCostTable"]
 
-_TABLE_VERSION = 1
+_TABLE_VERSION = 2
 
 
 @dataclass(frozen=True)
@@ -103,6 +103,8 @@ class StepCostTable:
         self.decode_buckets = bucket_boundaries(
             cfg.max_seq, step=bucket_step)
         self._prefill_s: Dict[int, float] = {}
+        self._prefill_base_s: Dict[int, float] = {}
+        self._prefill_per_seq_s: Dict[int, float] = {}
         self._decode_base_s: Dict[int, float] = {}
         self._decode_per_seq_s: Dict[int, float] = {}
         self.cache_hit = False
@@ -112,13 +114,12 @@ class StepCostTable:
             hit, val = disk.get(key)
             if hit and isinstance(val, dict) \
                     and val.get("v") == _TABLE_VERSION:
-                self._prefill_s = {int(k): float(v) for k, v
-                                   in val["prefill_s"].items()}
-                self._decode_base_s = {int(k): float(v) for k, v
-                                       in val["decode_base_s"].items()}
-                self._decode_per_seq_s = {
-                    int(k): float(v) for k, v
-                    in val["decode_per_seq_s"].items()}
+                for name in ("prefill_s", "prefill_base_s",
+                             "prefill_per_seq_s", "decode_base_s",
+                             "decode_per_seq_s"):
+                    setattr(self, "_" + name,
+                            {int(k): float(v)
+                             for k, v in val[name].items()})
                 self.cache_hit = True
         if not self.cache_hit:
             self._build()
@@ -126,6 +127,8 @@ class StepCostTable:
                 disk.put(key, {
                     "v": _TABLE_VERSION,
                     "prefill_s": dict(self._prefill_s),
+                    "prefill_base_s": dict(self._prefill_base_s),
+                    "prefill_per_seq_s": dict(self._prefill_per_seq_s),
                     "decode_base_s": dict(self._decode_base_s),
                     "decode_per_seq_s": dict(self._decode_per_seq_s)})
 
@@ -171,14 +174,21 @@ class StepCostTable:
 
     def _build(self) -> None:
         c = self.cfg
+        k = self.fit_batch
         for b in self.prefill_buckets:
             kw = dict(n_layers=c.n_layers, d_model=c.d_model,
                       n_heads=c.n_heads, d_ff=c.d_ff, seq=b,
                       vocab=c.vocab)
             art = self._compile("transformer", kw)
-            self._prefill_s[b] = float(
-                art.evaluate().cycles) / self._hz
-        k = self.fit_batch
+            c1 = float(art.evaluate().cycles)
+            # batch-1 cost stays the FIFO path's price verbatim: the
+            # affine fit is for *batched* prefill, and base + per_seq
+            # does not round-trip to c1 in float
+            self._prefill_s[b] = c1 / self._hz
+            ck = float(art.replace_options(batch=k).evaluate().cycles)
+            per = max((ck - c1) / (k - 1), 0.0)
+            self._prefill_per_seq_s[b] = per / self._hz
+            self._prefill_base_s[b] = max(c1 - per, 0.0) / self._hz
         for b in self.decode_buckets:
             kw = dict(n_layers=c.n_layers, d_model=c.d_model,
                       n_heads=c.n_heads, d_ff=c.d_ff, kv_len=b,
@@ -198,6 +208,22 @@ class StepCostTable:
         return self._prefill_s[bucket_for(prompt_len,
                                           self.prefill_buckets)]
 
+    def prefill_base_s(self, prompt_len: int) -> float:
+        return self._prefill_base_s[bucket_for(prompt_len,
+                                               self.prefill_buckets)]
+
+    def prefill_per_seq_s(self, prompt_len: int) -> float:
+        return self._prefill_per_seq_s[bucket_for(prompt_len,
+                                                  self.prefill_buckets)]
+
+    def prefill_batch_s(self, prompt_lens: Sequence[int]) -> float:
+        """Price one batched prefill over mixed prompts, O(batch) —
+        the same affine shape as :meth:`iteration_s`."""
+        if not prompt_lens:
+            return 0.0
+        return (self.prefill_base_s(max(prompt_lens))
+                + sum(self.prefill_per_seq_s(n) for n in prompt_lens))
+
     def decode_base_s(self, kv_len: int) -> float:
         return self._decode_base_s[bucket_for(kv_len,
                                               self.decode_buckets)]
@@ -216,6 +242,79 @@ class StepCostTable:
     def kv_bytes(self, kv_len: int) -> int:
         return self.cfg.kv_bytes(kv_len)
 
+    # -- synthetic tables / dense views -------------------------------
+
+    @classmethod
+    def from_costs(cls, cfg: ServeModelCfg,
+                   prefill_s: Dict[int, float],
+                   decode_base_s: Dict[int, float],
+                   decode_per_seq_s: Dict[int, float],
+                   prefill_base_s: Optional[Dict[int, float]] = None,
+                   prefill_per_seq_s: Optional[Dict[int, float]] = None,
+                   fit_batch: int = 8) -> "StepCostTable":
+        """Build a table from explicit per-bucket costs, skipping the
+        compiler entirely — for tests and benchmarks that need a cheap
+        deterministic table (e.g. million-request replays where the
+        analytic build would dominate).  Bucket grids are taken from
+        the dict keys.  Without an explicit prefill fit, batched
+        prefill degenerates to ``base = batch-1 cost, per_seq = 0``.
+        """
+        t = cls.__new__(cls)
+        t.cfg = cfg
+        t.chip = default_chip()
+        t.fidelity = "synthetic"
+        t.fit_batch = fit_batch
+        t.incremental = True
+        t.system = None
+        t.calibration = None
+        t._hz = t.chip.clock_ghz * 1e9
+        t.prefill_buckets = sorted(int(k) for k in prefill_s)
+        t.decode_buckets = sorted(int(k) for k in decode_base_s)
+        if sorted(int(k) for k in decode_per_seq_s) != t.decode_buckets:
+            raise ValueError("decode cost dicts must share buckets")
+        t._prefill_s = {int(k): float(v) for k, v in prefill_s.items()}
+        t._prefill_base_s = (
+            {int(k): float(v) for k, v in prefill_base_s.items()}
+            if prefill_base_s is not None else dict(t._prefill_s))
+        t._prefill_per_seq_s = (
+            {int(k): float(v) for k, v in prefill_per_seq_s.items()}
+            if prefill_per_seq_s is not None
+            else {b: 0.0 for b in t.prefill_buckets})
+        t._decode_base_s = {int(k): float(v)
+                            for k, v in decode_base_s.items()}
+        t._decode_per_seq_s = {int(k): float(v)
+                               for k, v in decode_per_seq_s.items()}
+        t.cache_hit = False
+        return t
+
+    def dense_decode(self):
+        """``(base_s, per_seq_s)`` numpy arrays indexed by KV length
+        (0..max bucket) — the array engine's O(1) bucket lookup."""
+        import numpy as np
+        hi = self.decode_buckets[-1]
+        base = np.empty(hi + 1, dtype=np.float64)
+        per = np.empty(hi + 1, dtype=np.float64)
+        for n in range(hi + 1):
+            b = bucket_for(n, self.decode_buckets)
+            base[n] = self._decode_base_s[b]
+            per[n] = self._decode_per_seq_s[b]
+        return base, per
+
+    def dense_prefill(self):
+        """``(batch1_s, base_s, per_seq_s)`` numpy arrays indexed by
+        prompt length (0..max bucket)."""
+        import numpy as np
+        hi = self.prefill_buckets[-1]
+        c1 = np.empty(hi + 1, dtype=np.float64)
+        base = np.empty(hi + 1, dtype=np.float64)
+        per = np.empty(hi + 1, dtype=np.float64)
+        for n in range(hi + 1):
+            b = bucket_for(n, self.prefill_buckets)
+            c1[n] = self._prefill_s[b]
+            base[n] = self._prefill_base_s[b]
+            per[n] = self._prefill_per_seq_s[b]
+        return c1, base, per
+
     def to_dict(self) -> Dict[str, Any]:
         return {
             "fidelity": self.fidelity,
@@ -226,6 +325,12 @@ class StepCostTable:
             "model": self.cfg.to_dict(),
             "prefill_s": {str(k): v
                           for k, v in sorted(self._prefill_s.items())},
+            "prefill_base_s": {
+                str(k): v
+                for k, v in sorted(self._prefill_base_s.items())},
+            "prefill_per_seq_s": {
+                str(k): v
+                for k, v in sorted(self._prefill_per_seq_s.items())},
             "decode_base_s": {
                 str(k): v
                 for k, v in sorted(self._decode_base_s.items())},
